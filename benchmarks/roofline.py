@@ -1,0 +1,97 @@
+"""Roofline table from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Reads ``benchmarks/artifacts/dryrun/<mesh>/<arch>__<shape>.json`` (written
+by ``repro.launch.dryrun``) and renders, per (arch x shape x mesh):
+
+* the three roofline terms (compute / memory / collective, seconds),
+* the dominant term,
+* MODEL_FLOPS = 6·N_active·D and the useful-compute ratio,
+* per-device peak HBM bytes (fits-in-16GB check),
+* the MFU upper bound implied by the dominant term.
+
+Also ranks the hillclimb candidates: worst useful-ratio, most
+collective-bound, and the decode cell most representative of serving.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+ART = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                   "artifacts", "dryrun")
+
+
+def load(mesh: str = "single") -> List[Dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(ART, mesh, "*.json"))):
+        with open(path) as f:
+            rows.append(json.load(f))
+    return rows
+
+
+def table(mesh: str = "single") -> List[Dict]:
+    out = []
+    for r in load(mesh):
+        if r["status"] == "skip":
+            out.append(dict(arch=r["arch"], shape=r["shape"], mesh=mesh,
+                            status="SKIP", note=r["skip_reason"]))
+            continue
+        if r["status"] != "ok":
+            out.append(dict(arch=r["arch"], shape=r["shape"], mesh=mesh,
+                            status="FAIL", note=r.get("error", "")[:60]))
+            continue
+        t = r["roofline"]
+        out.append(dict(
+            arch=r["arch"], shape=r["shape"], mesh=mesh, status="ok",
+            compute_ms=round(t["compute_s"] * 1e3, 2),
+            memory_ms=round(t["memory_s"] * 1e3, 2),
+            collective_ms=round(t["collective_s"] * 1e3, 2),
+            dcn_ms=round(t["collective_dcn_s"] * 1e3, 2),
+            dominant=t["dominant"].replace("_s", ""),
+            useful_ratio=round(t["useful_flop_ratio"], 3),
+            mfu_bound=round(t["mfu_upper_bound"], 3),
+            peak_gib=round(r["memory"]["peak_bytes"] / 2**30, 2),
+            fits_16g=r["memory"]["peak_bytes"] < 16 * 2**30,
+        ))
+    return out
+
+
+def hillclimb_candidates(rows: List[Dict]) -> Dict[str, str]:
+    ok = [r for r in rows if r["status"] == "ok"]
+    worst = min(ok, key=lambda r: r["useful_ratio"] if r["useful_ratio"] > 0
+                else 1.0)
+    coll = max(ok, key=lambda r: r["collective_ms"])
+    decodes = [r for r in ok if "decode" in r["shape"] or
+               "long" in r["shape"]]
+    rep = max(decodes, key=lambda r: r["memory_ms"]) if decodes else ok[0]
+    key = lambda r: f"{r['arch']} x {r['shape']} ({r['mesh']})"
+    return {"worst_useful_ratio": key(worst),
+            "most_collective_bound": key(coll),
+            "serving_representative": key(rep)}
+
+
+def main() -> None:
+    for mesh in ("single", "multi"):
+        rows = table(mesh)
+        if not rows:
+            print(f"# no artifacts for mesh={mesh}; run "
+                  f"`python -m repro.launch.dryrun --sweep --mesh {mesh}`")
+            continue
+        print(f"\n## roofline ({mesh}-pod mesh)")
+        cols = ["arch", "shape", "status", "compute_ms", "memory_ms",
+                "collective_ms", "dcn_ms", "dominant", "useful_ratio",
+                "mfu_bound", "peak_gib", "fits_16g"]
+        print(",".join(cols))
+        for r in rows:
+            print(",".join(str(r.get(c, "")) for c in cols))
+        ok = [r for r in rows if r["status"] == "ok"]
+        fits = sum(1 for r in ok if r["fits_16g"])
+        print(f"# {len(ok)} compiled, {fits}/{len(ok)} fit 16 GiB/chip")
+        if mesh == "single" and ok:
+            print("# hillclimb candidates:", hillclimb_candidates(rows))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Shared benchmark dataset suite (paper Table 1, scaled to CPU budgets).
+
+The paper's six data sets are reproduced at laptop scale: ``o3`` and
+``torus4`` follow the published definitions exactly (scaled n); ``dragon`` /
+``fractal`` are generated stand-ins with the same regimes (3-D surface
+cloud; self-similar network distance matrix); the Hi-C pair is the §6
+genome workload (control vs auxin).  ``--full`` in benchmarks/run.py scales
+n up ~4x.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional
+
+import numpy as np
+
+from repro.data import pointclouds as pc
+
+
+@dataclasses.dataclass
+class Dataset:
+    name: str
+    maxdim: int
+    tau_max: float
+    points: Optional[np.ndarray] = None
+    dists: Optional[np.ndarray] = None
+
+    def kwargs(self) -> Dict:
+        out: Dict = dict(tau_max=self.tau_max, maxdim=self.maxdim)
+        if self.points is not None:
+            out["points"] = self.points
+        else:
+            out["dists"] = self.dists
+        return out
+
+
+def build_suite(scale: float = 1.0) -> Dict[str, Dataset]:
+    s = scale
+    control, auxin = pc.hic_pair(int(350 * s), n_loops=24, seed=1)
+    return {
+        "dragon": Dataset("dragon", maxdim=1, tau_max=np.inf,
+                          points=pc.dragon_like(int(800 * s), seed=0)),
+        "fractal": Dataset("fractal", maxdim=2, tau_max=np.inf,
+                           dists=pc.fractal_like(int(128 * s), seed=0)),
+        "o3": Dataset("o3", maxdim=2, tau_max=0.9,
+                      points=pc.o3_points(int(512 * s), seed=0)),
+        "torus4_1": Dataset("torus4_1", maxdim=1, tau_max=0.4,
+                            points=pc.clifford_torus(int(800 * s), seed=0)),
+        "torus4_2": Dataset("torus4_2", maxdim=2, tau_max=0.4,
+                            points=pc.clifford_torus(int(800 * s), seed=0)),
+        "hic_control": Dataset("hic_control", maxdim=2, tau_max=0.6,
+                               points=control),
+        "hic_auxin": Dataset("hic_auxin", maxdim=2, tau_max=0.6,
+                             points=auxin),
+    }

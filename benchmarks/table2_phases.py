@@ -1,0 +1,42 @@
+"""Table 2 analog: per-phase timing of the Dory pipeline — filtration (+
+neighborhoods), H0, H1*, H2* — on the benchmark suite."""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+from repro.core import compute_ph
+
+from .suite import build_suite
+
+
+def run(scale: float = 1.0, engine: str = "batch") -> List[Dict]:
+    rows = []
+    for name, ds in build_suite(scale).items():
+        t0 = time.perf_counter()
+        res = compute_ph(engine=engine, **ds.kwargs())
+        wall = time.perf_counter() - t0
+        s = res.stats
+        rows.append(dict(
+            dataset=name, n=int(s["n"]), n_e=int(s["n_e"]),
+            t_filtration_s=round(s["t_filtration"], 3),
+            t_h0_s=round(s["t_h0"], 3),
+            t_h1_s=round(s.get("t_h1", 0.0), 3),
+            t_h2_s=round(s.get("t_h2", 0.0), 3),
+            total_s=round(wall, 3),
+            h1_pairs=len(res.diagrams.get(1, ())),
+            h2_pairs=len(res.diagrams.get(2, ())),
+        ))
+    return rows
+
+
+def main(scale: float = 1.0) -> None:
+    rows = run(scale)
+    cols = list(rows[0].keys())
+    print(",".join(cols))
+    for r in rows:
+        print(",".join(str(r[c]) for c in cols))
+
+
+if __name__ == "__main__":
+    main()

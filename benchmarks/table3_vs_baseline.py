@@ -1,0 +1,88 @@
+"""Table 3 analog: Dory engine vs the textbook baseline (standard column
+reduction over the full boundary matrix, Ripser-style full-filtration
+materialization) — time and memory.
+
+The paper's headline is the *memory wall*: representing the full filtration
+costs O(n^4) simplices while Dory's working set is O(n_e).  We measure:
+
+* baseline: wall time + peak tracemalloc of ``core/ref.py`` (which
+  materializes every simplex up to dim-3, exactly the wall the paper
+  describes) — and the simplex count it had to touch;
+* Dory (explicit / implicit x single / batch): wall time + peak tracemalloc
+  + the engine's own stored-bytes accounting (R^⊥ or V^⊥).
+
+Equality of the output diagrams is asserted — this benchmark doubles as an
+end-to-end correctness check.  Scaling n shows the gap growing; the paper's
+Table 3 shows the same effect at 5e4-3e6 points where the baseline cannot
+run at all.
+"""
+from __future__ import annotations
+
+import time
+import tracemalloc
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core import compute_ph, diagrams, ref
+from repro.data.pointclouds import clifford_torus
+
+
+def _measure(fn):
+    tracemalloc.start()
+    t0 = time.perf_counter()
+    out = fn()
+    wall = time.perf_counter() - t0
+    _, peak = tracemalloc.get_traced_memory()
+    tracemalloc.stop()
+    return out, wall, peak
+
+
+def run(sizes=(30, 45, 60), maxdim: int = 2) -> List[Dict]:
+    rows = []
+    for n in sizes:
+        pts = clifford_torus(n, seed=0)
+        tau = 1.0          # dense enough for real H1/H2 work at small n
+        dists = None
+
+        base_pds, base_t, base_mem = _measure(
+            lambda: ref.standard_reduction_points(pts, tau_max=tau,
+                                                  maxdim=maxdim))
+        n_simplices = len(ref.vr_simplices(
+            ref.pairwise_distances(pts), tau, maxdim))
+
+        row = dict(n=n, tau=tau, baseline_s=round(base_t, 3),
+                   baseline_peak_mb=round(base_mem / 2**20, 2),
+                   baseline_simplices=n_simplices)
+        for mode in ("explicit", "implicit"):
+            res, t, mem = _measure(
+                lambda m=mode: compute_ph(points=pts, tau_max=tau,
+                                          maxdim=maxdim, mode=m,
+                                          engine="batch"))
+            diagrams.assert_diagrams_equal(res.diagrams, base_pds,
+                                           dims=range(maxdim + 1))
+            stored = res.stats.get("h1_stored_bytes", 0) + \
+                res.stats.get("h2_stored_bytes", 0)
+            row[f"dory_{mode}_s"] = round(t, 3)
+            row[f"dory_{mode}_peak_mb"] = round(mem / 2**20, 2)
+            row[f"dory_{mode}_stored_kb"] = round(stored / 1024, 1)
+        row["n_e"] = int(res.stats["n_e"])
+        rows.append(row)
+    return rows
+
+
+def main() -> None:
+    rows = run()
+    cols = list(rows[0].keys())
+    print(",".join(cols))
+    for r in rows:
+        print(",".join(str(r[c]) for c in cols))
+    last = rows[-1]
+    print(f"# memory wall: baseline touches {last['baseline_simplices']} "
+          f"simplices; Dory stores O(n_e)={last['n_e']} edges "
+          f"(+{last['dory_implicit_stored_kb']} kB of V^T) — "
+          f"diagrams identical (asserted)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,69 @@
+"""The paper's §6 application, reproduced end-to-end at laptop scale:
+topology of a (synthetic) genome under cohesin degradation.
+
+A folded-polymer point cloud stands in for the Hi-C contact geometry: the
+*control* condition has cohesin loop anchors pulling loci pairs together;
+the *auxin* condition releases them (cohesin degraded).  Dory's PH engine
+computes H0/H1/H2 for both conditions; the paper's Fig. 21 result is the
+signed direction of the change — auxin REMOVES loops (H1 down, strongly)
+and voids (H2 down).
+
+    PYTHONPATH=src python examples/genome_hic.py [--n 400] [--loops 24]
+"""
+import argparse
+
+import numpy as np
+
+from repro.core import compute_ph
+from repro.data.pointclouds import hic_pair
+
+
+def betti_curve(pd: np.ndarray, taus: np.ndarray) -> np.ndarray:
+    if pd.size == 0:
+        return np.zeros_like(taus)
+    return np.array([((pd[:, 0] <= t) & (pd[:, 1] > t)).sum() for t in taus])
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=400)
+    ap.add_argument("--loops", type=int, default=24)
+    ap.add_argument("--tau-max", type=float, default=0.8)
+    ap.add_argument("--maxdim", type=int, default=2)
+    args = ap.parse_args()
+
+    control, auxin = hic_pair(args.n, n_loops=args.loops, seed=1)
+    print(f"genome-like cloud: {args.n} loci, {args.loops} cohesin loops")
+
+    res_c = compute_ph(points=control, tau_max=args.tau_max,
+                       maxdim=args.maxdim, engine="batch")
+    res_a = compute_ph(points=auxin, tau_max=args.tau_max,
+                       maxdim=args.maxdim, engine="batch")
+
+    for d in range(1, args.maxdim + 1):
+        pc, pa = res_c.diagrams[d], res_a.diagrams[d]
+        # count features with non-trivial persistence (paper counts loops
+        # robust to noise)
+        thr = 0.05
+        nc = int((pc[:, 1] - pc[:, 0] > thr).sum()) if pc.size else 0
+        na = int((pa[:, 1] - pa[:, 0] > thr).sum()) if pa.size else 0
+        pct = 100.0 * (na - nc) / max(nc, 1)
+        print(f"H{d}: control {nc} features, auxin {na} "
+              f"({pct:+.1f}% — paper Fig. 21 expects a decrease)")
+
+    # betti-1 curve over scale (Fig. 21's x-axis is the threshold)
+    taus = np.linspace(0.05, args.tau_max * 0.9, 8)
+    bc = betti_curve(res_c.diagrams[1], taus)
+    ba = betti_curve(res_a.diagrams[1], taus)
+    print("tau:     ", "  ".join(f"{t:5.2f}" for t in taus))
+    print("control: ", "  ".join(f"{v:5d}" for v in bc))
+    print("auxin:   ", "  ".join(f"{v:5d}" for v in ba))
+
+    nc = int((res_c.diagrams[1][:, 1] - res_c.diagrams[1][:, 0] > 0.05).sum())
+    na = int((res_a.diagrams[1][:, 1] - res_a.diagrams[1][:, 0] > 0.05).sum())
+    assert na < nc, "expected auxin to remove H1 loops (paper Fig. 21)"
+    print("OK: auxin removes loops — Fig. 21 direction reproduced.")
+
+
+if __name__ == "__main__":
+    main()

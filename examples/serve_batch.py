@@ -1,0 +1,52 @@
+"""Batched serving: submit a queue of requests to the fixed-slot engine and
+stream generations — prefill batches newcomers, decode advances all active
+slots one token per step.
+
+    PYTHONPATH=src python examples/serve_batch.py [--requests 12]
+"""
+import argparse
+import time
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.serve.engine import Request, ServeEngine
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--max-new", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = get_config("qwen3-0.6b", reduced=True)
+    engine = ServeEngine(cfg, max_batch=args.max_batch, prompt_len=16,
+                         s_max=64)
+    rng = np.random.default_rng(0)
+    t_submit = {}
+    for uid in range(args.requests):
+        prompt = rng.integers(0, cfg.vocab_size, size=int(rng.integers(4, 16)),
+                              dtype=np.int32)
+        engine.submit(Request(uid=uid, prompt=prompt, max_new=args.max_new))
+        t_submit[uid] = time.perf_counter()
+
+    t0 = time.perf_counter()
+    steps = 0
+    while engine.queue or any(s is not None for s in engine._slots):
+        engine.step()
+        steps += 1
+    wall = time.perf_counter() - t0
+
+    done = engine.done
+    total = sum(len(v) for v in done.values())
+    print(f"served {len(done)} requests / {total} tokens in {wall:.2f}s "
+          f"({steps} engine steps, {total / wall:.0f} tok/s on CPU)")
+    assert len(done) == args.requests
+    for uid in sorted(done)[:3]:
+        print(f"  req {uid:2d} -> {done[uid]}")
+    print("OK: all requests completed through batched prefill+decode.")
+
+
+if __name__ == "__main__":
+    main()

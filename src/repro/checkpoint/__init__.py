@@ -1,0 +1,4 @@
+"""Fault-tolerant sharded checkpointing."""
+from .checkpointer import Checkpointer
+
+__all__ = ["Checkpointer"]

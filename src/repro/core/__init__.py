@@ -1,0 +1,13 @@
+"""Dory core: scalable persistent homology (the paper's primary contribution)."""
+from .filtration import Filtration, build_filtration, pairwise_distances
+from .homology import PHResult, compute_ph
+from .h0 import compute_h0
+from .pairing import EMPTY_KEY, pack, unpack
+from . import diagrams
+from . import ref
+
+__all__ = [
+    "Filtration", "build_filtration", "pairwise_distances",
+    "PHResult", "compute_ph", "compute_h0",
+    "EMPTY_KEY", "pack", "unpack", "diagrams", "ref",
+]

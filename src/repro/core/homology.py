@@ -1,0 +1,171 @@
+"""Top-level persistent homology API (Dory Algorithm 3: H0, H1*, H2*).
+
+``compute_ph`` is the user-facing entry point: point cloud or distance matrix
+in, persistence diagrams out, with the paper's full pipeline — filtration +
+neighborhoods, H0 union-find, cohomology reduction of edges (H1*) with
+H0-clearing, then cohomology reduction of triangles (H2*) with H1*-clearing;
+trivial pairs detected on the fly throughout.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, Optional
+
+import numpy as np
+
+from . import coboundary as cb
+from .filtration import Filtration, build_filtration
+from .h0 import compute_h0
+from .pairing import EMPTY_KEY
+from .reduction import DimensionAdapter, ReductionResult, reduce_dimension
+
+
+def make_h1_adapter(filt: Filtration, sparse: bool = True) -> DimensionAdapter:
+    """H1*: columns = edge orders; lows = triangle keys."""
+    min_cob = cb.min_edge_cobdy_all(filt, sparse=sparse)
+    cobdy_fn = cb.edge_cobdy_sparse if sparse else cb.edge_cobdy_ns
+
+    return DimensionAdapter(
+        cobdy=lambda ids: cobdy_fn(filt, ids),
+        owner_of_low=lambda lows: np.asarray(lows, dtype=np.int64) >> 32,
+        min_cobdy=lambda ids: min_cob[np.asarray(ids, dtype=np.int64)],
+        birth_value=lambda ids: filt.edge_len[np.asarray(ids, dtype=np.int64)],
+        death_value=lambda lows: filt.edge_len[
+            np.asarray(lows, dtype=np.int64) >> 32],
+    )
+
+
+def make_h2_adapter(filt: Filtration, sparse: bool = True) -> DimensionAdapter:
+    """H2*: columns = triangle keys; lows = tetrahedron keys."""
+    cobdy_fn = cb.tri_cobdy_sparse if sparse else cb.tri_cobdy_ns
+    min_cache: Dict[int, int] = {}
+
+    def min_cobdy(ids: np.ndarray) -> np.ndarray:
+        ids = np.atleast_1d(np.asarray(ids, dtype=np.int64))
+        missing = [int(t) for t in ids if int(t) not in min_cache]
+        if missing:
+            keys = cobdy_fn(filt, np.array(missing, dtype=np.int64))
+            for t, k in zip(missing, keys[:, 0]):
+                min_cache[t] = int(k)
+        return np.array([min_cache[int(t)] for t in ids], dtype=np.int64)
+
+    return DimensionAdapter(
+        cobdy=lambda ids: cobdy_fn(filt, ids),
+        owner_of_low=lambda lows: cb.greatest_boundary_triangle(
+            filt, np.asarray(lows, dtype=np.int64)),
+        min_cobdy=min_cobdy,
+        birth_value=lambda ids: filt.edge_len[
+            np.asarray(ids, dtype=np.int64) >> 32],
+        death_value=lambda lows: filt.edge_len[
+            np.asarray(lows, dtype=np.int64) >> 32],
+    )
+
+
+def h2_columns(filt: Filtration, h1_pivots: np.ndarray,
+               sparse: bool = True) -> np.ndarray:
+    """Triangle columns for H2* in decreasing F2 order, with clearing.
+
+    Triangles are grouped by diameter edge (descending), ks descending within
+    a group — exactly paper Alg. 3 lines 12-15.  Triangles that were H1*
+    pivots (deaths) are cleared.
+    """
+    cleared = set(int(k) for k in h1_pivots)
+    cols = []
+    edge_ids = np.arange(filt.n_e - 1, -1, -1, dtype=np.int64)
+    batch = 2048
+    for s in range(0, len(edge_ids), batch):
+        ids = edge_ids[s:s + batch]
+        groups = cb.case1_triangles_of_edges(filt, ids, sparse=sparse)
+        for keys in groups:
+            for k in keys[::-1]:           # ks descending within the group
+                if int(k) not in cleared:
+                    cols.append(int(k))
+    return np.array(cols, dtype=np.int64)
+
+
+@dataclasses.dataclass
+class PHResult:
+    diagrams: Dict[int, np.ndarray]    # dim -> (k, 2) (birth, death), inf allowed
+    stats: Dict[str, float]
+
+    def betti_at(self, tau: float) -> Dict[int, int]:
+        out = {}
+        for d, pd in self.diagrams.items():
+            if pd.size == 0:
+                out[d] = 0
+            else:
+                out[d] = int(((pd[:, 0] <= tau) & (pd[:, 1] > tau)).sum())
+        return out
+
+
+def compute_ph(
+    points: Optional[np.ndarray] = None,
+    dists: Optional[np.ndarray] = None,
+    tau_max: float = np.inf,
+    maxdim: int = 2,
+    mode: str = "explicit",
+    sparse: Optional[bool] = None,
+    filtration: Optional[Filtration] = None,
+    engine: str = "single",
+    batch_size: int = 128,
+) -> PHResult:
+    """Persistent homology up to ``maxdim`` (<= 2), Dory pipeline.
+
+    mode: "explicit" stores R^⊥ (paper Alg. 1 spirit), "implicit" stores only
+    V^⊥ (paper Alg. 2 / fast implicit column spirit).
+    sparse: neighborhoods (Dory) vs dense order matrix (DoryNS); default picks
+    NS for small n where the O(n^2) table is cheap.
+    engine: "single" (1-thread analog) or "batch" (serial-parallel, §4.4).
+    """
+    stats: Dict[str, float] = {}
+    t0 = time.perf_counter()
+    filt = filtration if filtration is not None else build_filtration(
+        points=points, dists=dists, tau_max=tau_max)
+    stats["t_filtration"] = time.perf_counter() - t0
+    stats["n"] = float(filt.n)
+    stats["n_e"] = float(filt.n_e)
+    stats["base_memory_bytes"] = float(filt.base_memory_bytes())
+    if sparse is None:
+        sparse = filt.n > 1024
+    if engine == "batch":
+        from .serial_parallel import reduce_dimension_batched
+
+        def _reduce(adapter, cols, mode=mode, cleared=None):
+            return reduce_dimension_batched(adapter, cols, mode=mode,
+                                            cleared=cleared,
+                                            batch_size=batch_size)
+    else:
+        _reduce = reduce_dimension
+
+    diagrams: Dict[int, np.ndarray] = {}
+
+    t0 = time.perf_counter()
+    h0 = compute_h0(filt)
+    diagrams[0] = h0.diagram()
+    stats["t_h0"] = time.perf_counter() - t0
+
+    if maxdim >= 1:
+        t0 = time.perf_counter()
+        adapter1 = make_h1_adapter(filt, sparse=sparse)
+        cols1 = np.arange(filt.n_e - 1, -1, -1, dtype=np.int64)
+        cleared1 = set(int(e) for e in h0.death_edges)
+        res1 = _reduce(adapter1, cols1, mode=mode, cleared=cleared1)
+        diagrams[1] = res1.diagram()
+        stats["t_h1"] = time.perf_counter() - t0
+        for k, v in res1.stats.items():
+            stats[f"h1_{k}"] = v
+    else:
+        res1 = None
+
+    if maxdim >= 2:
+        t0 = time.perf_counter()
+        adapter2 = make_h2_adapter(filt, sparse=sparse)
+        cols2 = h2_columns(filt, res1.pivot_lows, sparse=sparse)
+        res2 = _reduce(adapter2, cols2, mode=mode)
+        diagrams[2] = res2.diagram()
+        stats["t_h2"] = time.perf_counter() - t0
+        for k, v in res2.stats.items():
+            stats[f"h2_{k}"] = v
+
+    return PHResult(diagrams=diagrams, stats=stats)

@@ -1,0 +1,254 @@
+"""JAX/TPU engine for Dory: jitted column algebra + distributed reduction.
+
+This module is the TPU-native core of the paper's serial-parallel algorithm
+(§4.4), expressed as pure-jnp programs that lower under ``pjit``/``shard_map``
+on the production meshes:
+
+* columns are fixed-width sorted ``int64`` paired-index key arrays
+  (``EMPTY_KEY`` padded) — the static-shape counterpart of the paper's
+  hash-table-of-φ-representations;
+* GF(2) column addition = ``merge_cancel`` (concat → sort → cancel equal
+  pairs), a pure sort-network op that vectorizes on the VPU;
+* the **parallel phase** reduces every batch column against the replicated
+  committed pivot table (binary-searched lookups, gathered addends) — sharded
+  over the ``data`` (and ``pod``) mesh axes with zero collectives;
+* the **serial phase** becomes a log-depth *tournament* over the data axis
+  (``ppermute`` exchange + local collision XOR) — a beyond-paper improvement
+  on the strictly-serial intra-batch pass (log(B) exchange rounds instead of
+  a linear sweep, same precedence rule: the earlier-ranked shard's column
+  wins).  Residual collisions are completed by the exact host engine, so
+  device pre-reduction never changes results, only removes work;
+* **H0** is a Borůvka minimum-spanning-forest (segment-min + pointer
+  jumping), replacing the paper's sequential union-find with a log-depth
+  TPU-friendly program that yields *identical* persistence pairs
+  (unique edge orders ⇒ unique MSF).
+
+Paired-index keys are 64-bit, so this module enables jax x64 at import; all
+model code elsewhere pins dtypes explicitly and is unaffected.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+jax.config.update("jax_enable_x64", True)
+
+EMPTY = np.int64(np.iinfo(np.int64).max)
+
+
+# ---------------------------------------------------------------------------
+# Column algebra (padded, fixed width)
+# ---------------------------------------------------------------------------
+
+def merge_cancel_padded(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """GF(2) sum of batched sorted key columns.
+
+    a: (..., Wa), b: (..., Wb) int64 ascending with EMPTY padding; each key
+    appears at most once per operand.  Returns (..., Wa+Wb) ascending EMPTY
+    padded (callers truncate/track overflow).
+    """
+    m = jnp.concatenate([a, b], axis=-1)
+    m = jnp.sort(m, axis=-1)
+    eq_prev = jnp.concatenate(
+        [jnp.zeros_like(m[..., :1], dtype=bool), m[..., 1:] == m[..., :-1]],
+        axis=-1)
+    eq_next = jnp.concatenate(
+        [m[..., :-1] == m[..., 1:], jnp.zeros_like(m[..., :1], dtype=bool)],
+        axis=-1)
+    cancel = (eq_prev | eq_next) & (m != EMPTY)
+    m = jnp.where(cancel, EMPTY, m)
+    return jnp.sort(m, axis=-1)
+
+
+def truncate_width(cols: jnp.ndarray, width: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Clip columns back to ``width`` keys, flagging overflow per row."""
+    if cols.shape[-1] <= width:
+        pad = jnp.full(cols.shape[:-1] + (width - cols.shape[-1],), EMPTY,
+                       dtype=cols.dtype)
+        return jnp.concatenate([cols, pad], axis=-1), \
+            jnp.zeros(cols.shape[:-1], dtype=bool)
+    overflow = (cols[..., width:] != EMPTY).any(axis=-1)
+    return cols[..., :width], overflow
+
+
+# ---------------------------------------------------------------------------
+# Parallel phase: reduce batch columns against the committed pivot table
+# ---------------------------------------------------------------------------
+
+def parallel_reduce(cols: jnp.ndarray, pivot_keys: jnp.ndarray,
+                    pivot_cols: jnp.ndarray, n_iters: int = 8
+                    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """``n_iters`` rounds of: look up each column's low in the pivot table,
+    XOR in the owning reduced column.  cols: (B, W); pivot_keys: (P,) sorted
+    ascending (EMPTY padded); pivot_cols: (P, W).
+
+    Returns (cols', hit_last) — a row whose low still matches a pivot after
+    the budget is finished by the next round / host orchestration; semantics
+    match the paper's parallel phase exactly (reduction with R^⊥ first).
+    """
+    W = cols.shape[-1]
+    P = pivot_keys.shape[0]
+
+    def body(_, carry):
+        cols, _ = carry
+        low = cols[:, 0]
+        idx = jnp.clip(jnp.searchsorted(pivot_keys, low), 0, P - 1)
+        hit = (pivot_keys[idx] == low) & (low != EMPTY)
+        addend = jnp.where(hit[:, None], pivot_cols[idx], EMPTY)
+        merged = merge_cancel_padded(cols, addend)
+        return merged[:, :W], hit     # reduction strictly shrinks the low
+
+    return jax.lax.fori_loop(
+        0, n_iters, body, (cols, jnp.zeros(cols.shape[0], dtype=bool)))
+
+
+# ---------------------------------------------------------------------------
+# Serial phase as a log-depth tournament over the data axis
+# ---------------------------------------------------------------------------
+
+def tournament_merge_local(cols: jnp.ndarray, other: jnp.ndarray) -> jnp.ndarray:
+    """Absorb colliding partner columns: every row of ``cols`` whose low
+    appears among ``other``'s lows gets that column XOR-ed in (GF(2))."""
+    W = cols.shape[-1]
+    low = cols[:, 0]
+    order = jnp.argsort(other[:, 0])
+    olow_s = other[:, 0][order]
+    oc_s = other[order]
+    idx = jnp.clip(jnp.searchsorted(olow_s, low), 0, other.shape[0] - 1)
+    hit = (olow_s[idx] == low) & (low != EMPTY)
+    addend = jnp.where(hit[:, None], oc_s[idx], EMPTY)
+    return merge_cancel_padded(cols, addend)[:, :W]
+
+
+def make_distributed_round(mesh: jax.sharding.Mesh,
+                           n_parallel_iters: int = 8,
+                           n_serial_rounds: int | None = None):
+    """Build the sharded serial-parallel round — the dry-run entry most
+    representative of the paper's technique.
+
+    Layout: batch columns sharded over ``data`` (x ``pod`` if present);
+    pivot table replicated.  One round =
+      parallel phase (no collectives)
+      -> tournament serial phase over ``data`` (log2 rounds of ppermute +
+         collision XOR; later-ranked shard absorbs, matching filtration
+         precedence since batches are dealt in filtration order)
+      -> clearance traffic: all_gather of resolved lows (+ all_gather over
+         ``pod`` so every pod sees the commit set).
+    """
+    from jax.sharding import PartitionSpec as P
+
+    data = mesh.shape["data"]
+    n_rounds = n_serial_rounds if n_serial_rounds is not None else \
+        max(1, int(np.log2(data)))
+    has_pod = "pod" in mesh.axis_names
+    col_axes = ("pod", "data") if has_pod else ("data",)
+
+    def round_fn(cols, pivot_keys, pivot_cols):
+        cols, _ = parallel_reduce(cols, pivot_keys, pivot_cols,
+                                  n_iters=n_parallel_iters)
+        me = jax.lax.axis_index("data")
+        step = 1
+        for _ in range(n_rounds):
+            perm = [(i, i ^ step) for i in range(data)]
+            other = jax.lax.ppermute(cols, "data", perm=perm)
+            absorb = (me & step) != 0          # partner ranked earlier
+            merged = tournament_merge_local(cols, other)
+            cols = jnp.where(absorb, merged, cols)
+            cols, _ = parallel_reduce(cols, pivot_keys, pivot_cols, n_iters=2)
+            step <<= 1
+        lows = jax.lax.all_gather(cols[:, 0], "data", tiled=True)
+        if has_pod:
+            lows = jax.lax.all_gather(lows, "pod", tiled=True)
+        return cols, lows
+
+    return jax.shard_map(
+        round_fn, mesh=mesh,
+        in_specs=(P(col_axes, None), P(None), P(None, None)),
+        out_specs=(P(col_axes, None), P(None)),
+        check_vma=False,
+    )
+
+
+# ---------------------------------------------------------------------------
+# H0 via Borůvka MSF (log-depth, exact persistence pairs)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("n",))
+def h0_msf_mask(edges: jnp.ndarray, n: int) -> jnp.ndarray:
+    """Minimum-spanning-forest mask over edges sorted by filtration order.
+
+    edges: (n_e, 2) int32, row index = filtration order (unique ⇒ unique MSF
+    ⇒ identical H0 persistence pairs to Kruskal/union-find).
+    Returns bool (n_e,) — True exactly for H0 death edges (clearing input).
+    """
+    n_e = edges.shape[0]
+    eo = jnp.arange(n_e, dtype=jnp.int64)
+    INF = jnp.int64(n_e)
+
+    def compress(parent):
+        def cond(p):
+            return jnp.any(p[p] != p)
+
+        return jax.lax.while_loop(cond, lambda p: p[p], parent)
+
+    def round_body(carry):
+        label, in_msf, _ = carry
+        la = label[edges[:, 0]]
+        lb = label[edges[:, 1]]
+        cross = la != lb
+        w = jnp.where(cross, eo, INF)
+        best = jnp.full((n,), INF, dtype=jnp.int64)
+        best = best.at[la].min(w)
+        best = best.at[lb].min(w)
+        chosen = ((best[la] == eo) | (best[lb] == eo)) & cross
+        in_msf = in_msf | chosen
+        lo = jnp.minimum(la, lb)
+        hi = jnp.maximum(la, lb)
+        parent = jnp.arange(n, dtype=jnp.int64)
+        parent = parent.at[jnp.where(chosen, hi, n)].min(
+            jnp.where(chosen, lo, n), mode="drop")
+        parent = compress(parent)
+        return parent[label], in_msf, jnp.any(chosen)
+
+    label, in_msf, _ = jax.lax.while_loop(
+        lambda c: c[2],
+        round_body,
+        (jnp.arange(n, dtype=jnp.int64), jnp.zeros(n_e, dtype=bool),
+         jnp.bool_(n_e > 0)),
+    )
+    return in_msf
+
+
+def connected_labels(edges: jnp.ndarray, n: int, rounds: int = 16) -> jnp.ndarray:
+    """Component labels by hook + pointer-jumping (betti_0 at a scale)."""
+    parent = jnp.arange(n, dtype=jnp.int64)
+
+    def body(_, parent):
+        pa = parent[edges[:, 0]]
+        pb = parent[edges[:, 1]]
+        lo = jnp.minimum(pa, pb)
+        hi = jnp.maximum(pa, pb)
+        parent = parent.at[hi].min(lo)
+        parent = parent[parent]
+        parent = parent[parent]
+        return parent
+
+    return jax.lax.fori_loop(0, rounds, body, parent)
+
+
+# ---------------------------------------------------------------------------
+# Host-callable jitted helpers used by the numpy engines
+# ---------------------------------------------------------------------------
+
+@jax.jit
+def merge_cancel_jax(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    return merge_cancel_padded(a, b)
+
+
+@functools.partial(jax.jit, static_argnames=("n_iters",))
+def parallel_reduce_jit(cols, pivot_keys, pivot_cols, n_iters: int = 8):
+    return parallel_reduce(cols, pivot_keys, pivot_cols, n_iters=n_iters)

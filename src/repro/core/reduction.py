@@ -1,0 +1,231 @@
+"""Cohomology reduction engines (Dory §4.3).
+
+Implements the paper's reduction family on packed paired-index keys:
+
+* ``explicit`` mode — paper Algorithm 1: store the reduced coboundary columns
+  ``R^⊥`` (sorted key arrays).  Fastest, highest memory.
+* ``implicit`` mode — paper Algorithm 2 / §4.3.4 ("fast implicit column"):
+  store only the reduction operations ``V^⊥`` (lists of generator column
+  ids); a lookback re-materializes ``R^⊥(e') = ⊕ δe''`` by vectorized
+  coboundary enumeration + merge-cancel.  Memory ∝ Σ|V| — the paper's
+  potential factor-n saving.
+
+Both modes implement:
+* **trivial persistence pairs** (§4.3.5): pairs ``(t, e')`` with
+  ``t = min δe'`` and ``diam(t) = e'`` are never stored and are detected by
+  an O(1) check against the precomputed min-cofacet array; reductions with a
+  trivial owner use its freshly-enumerated coboundary.
+* **clearing** (§4.5, Chen-Kerber): columns that were pivots in the lower
+  dimension are skipped entirely.
+
+The *serial-parallel* batched engine (§4.4) lives in ``serial_parallel.py``
+and reuses the same column primitives.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+from .pairing import EMPTY_KEY
+
+
+def merge_cancel(a: np.ndarray, b: np.ndarray) -> np.ndarray:
+    """Symmetric difference of two sorted unique int64 key arrays (GF(2) add).
+
+    The TPU form of "column j <- column j (+) column i": concatenate, sort,
+    drop equal pairs.  Inputs may carry EMPTY_KEY padding (stripped)."""
+    m = np.concatenate([a, b])
+    m = m[m != EMPTY_KEY]
+    m.sort(kind="stable")
+    if m.size == 0:
+        return m
+    neq_prev = np.empty(m.size, dtype=bool)
+    neq_prev[0] = True
+    np.not_equal(m[1:], m[:-1], out=neq_prev[1:])
+    neq_next = np.empty(m.size, dtype=bool)
+    neq_next[-1] = True
+    np.not_equal(m[:-1], m[1:], out=neq_next[:-1])
+    return m[neq_prev & neq_next]
+
+
+def parity_reduce(keys: np.ndarray) -> np.ndarray:
+    """Keep keys appearing an odd number of times (multi-way GF(2) sum)."""
+    keys = keys[keys != EMPTY_KEY]
+    if keys.size == 0:
+        return keys
+    u, c = np.unique(keys, return_counts=True)
+    return u[(c % 2) == 1]
+
+
+@dataclasses.dataclass
+class DimensionAdapter:
+    """Dimension-specific plumbing for the generic cohomology reduction.
+
+    columns are identified by int64 ids (edge order for H1*, packed triangle
+    key for H2*); lows are cofacet keys one dimension up.
+    """
+    # coboundary of a batch of column ids -> (B, K) sorted keys, EMPTY pad
+    cobdy: Callable[[np.ndarray], np.ndarray]
+    # candidate trivial owner of a low key -> column id
+    owner_of_low: Callable[[np.ndarray], np.ndarray]
+    # min cofacet key of a column id (for trivial checks); vectorized
+    min_cobdy: Callable[[np.ndarray], np.ndarray]
+    # filtration value of a column id / of a low key
+    birth_value: Callable[[np.ndarray], np.ndarray]
+    death_value: Callable[[np.ndarray], np.ndarray]
+
+
+@dataclasses.dataclass
+class ReductionResult:
+    pairs: np.ndarray          # (k, 2) float64 (birth, death), death finite
+    essentials: np.ndarray     # (m,) float64 births of never-dying classes
+    pivot_lows: np.ndarray     # int64 keys that became pivots (for clearing)
+    stats: Dict[str, float]
+
+    def diagram(self) -> np.ndarray:
+        ess = np.stack([self.essentials,
+                        np.full_like(self.essentials, np.inf)], axis=1) \
+            if self.essentials.size else np.zeros((0, 2))
+        return np.concatenate([self.pairs, ess], axis=0)
+
+
+class PivotStore:
+    """R^⊥/V^⊥ storage with trivial pairs excluded (paper §4.3.1, §4.3.5)."""
+
+    def __init__(self, adapter: DimensionAdapter, mode: str):
+        assert mode in ("explicit", "implicit")
+        self.adapter = adapter
+        self.mode = mode
+        self.low_to_idx: Dict[int, int] = {}
+        self.columns: List[np.ndarray] = []   # explicit: R keys; implicit: V gens
+        self.col_ids: List[int] = []
+        self.bytes_stored = 0
+
+    def lookup_addend(self, low: int, self_id: int) -> Optional[np.ndarray]:
+        """Column to add into r given its current low; None if low is fresh.
+
+        Order of checks mirrors the paper: trivial pair first (O(1) check,
+        nothing stored), then the committed pivot table.
+        """
+        owner = int(self.adapter.owner_of_low(np.array([low], dtype=np.int64))[0])
+        if owner != self_id:
+            mc = int(self.adapter.min_cobdy(np.array([owner], dtype=np.int64))[0])
+            if mc == low:
+                # (low, owner) is a trivial pair: R(owner) == δ(owner).
+                return self.adapter.cobdy(np.array([owner], dtype=np.int64))[0]
+        idx = self.low_to_idx.get(low)
+        if idx is None:
+            return None
+        if self.mode == "explicit":
+            return self.columns[idx]
+        # implicit: re-materialize R(e') = ⊕_{e'' in V(e') ∪ {e'}} δe''.
+        gens = np.concatenate([self.columns[idx],
+                               np.array([self.col_ids[idx]], dtype=np.int64)])
+        keys = self.adapter.cobdy(gens).ravel()
+        return parity_reduce(keys)
+
+    def commit(self, low: int, col_id: int, r: np.ndarray, gens: np.ndarray,
+               trivial: bool) -> None:
+        if trivial:
+            return  # never stored (paper §4.3.5)
+        self.low_to_idx[low] = len(self.columns)
+        self.col_ids.append(col_id)
+        if self.mode == "explicit":
+            self.columns.append(r)
+            self.bytes_stored += r.nbytes
+        else:
+            self.columns.append(gens)
+            self.bytes_stored += gens.nbytes
+
+
+def reduce_dimension(
+    adapter: DimensionAdapter,
+    column_ids: np.ndarray,
+    mode: str = "explicit",
+    cleared: Optional[set] = None,
+    return_store: bool = False,
+):
+    """Single-column (paper 1-thread) cohomology reduction.
+
+    ``column_ids`` must be in *decreasing* filtration order (``F^-1``), with
+    clearing already applied or supplied via ``cleared``.
+    """
+    store = PivotStore(adapter, mode)
+    pairs: List[tuple] = []
+    essentials: List[float] = []
+    n_reductions = 0
+    cleared = cleared or set()
+
+    for col_id in column_ids:
+        col_id = int(col_id)
+        if col_id in cleared:
+            continue
+        r = adapter.cobdy(np.array([col_id], dtype=np.int64))[0]
+        r = r[r != EMPTY_KEY]
+        gens_parity: Dict[int, int] = {}
+        while True:
+            if r.size == 0:
+                essentials.append(float(
+                    adapter.birth_value(np.array([col_id], dtype=np.int64))[0]))
+                break
+            low = int(r[0])
+            addend = store.lookup_addend(low, col_id)
+            if addend is None:
+                # Fresh pivot: (low, col_id) is a persistence pair.
+                mc = int(adapter.min_cobdy(
+                    np.array([col_id], dtype=np.int64))[0])
+                owner = int(adapter.owner_of_low(
+                    np.array([low], dtype=np.int64))[0])
+                trivial = (mc == low) and (owner == col_id)
+                gens = np.array(
+                    [g for g, p in gens_parity.items() if p % 2 == 1],
+                    dtype=np.int64)
+                store.commit(low, col_id, r, gens, trivial)
+                b = float(adapter.birth_value(np.array([col_id], dtype=np.int64))[0])
+                d = float(adapter.death_value(np.array([low], dtype=np.int64))[0])
+                pairs.append((b, d, low))
+                break
+            # r <- r (+) R(owner); track V in parity dict (implicit bookkeeping)
+            n_reductions += 1
+            owner = int(self_owner_of(store, adapter, low))
+            gens_parity[owner] = gens_parity.get(owner, 0) + 1
+            for g in store_gens(store, low):
+                gens_parity[int(g)] = gens_parity.get(int(g), 0) + 1
+            r = merge_cancel(r, addend)
+
+    pair_arr = np.array([(b, d) for b, d, _ in pairs if d > b],
+                        dtype=np.float64).reshape(-1, 2)
+    pivot_lows = np.array([low for _, _, low in pairs], dtype=np.int64)
+    ess_arr = np.array(essentials, dtype=np.float64)
+    result = ReductionResult(
+        pairs=pair_arr, essentials=ess_arr, pivot_lows=pivot_lows,
+        stats={
+            "n_columns": float(len(column_ids)),
+            "n_reductions": float(n_reductions),
+            "n_pairs": float(len(pairs)),
+            "n_essential": float(len(essentials)),
+            "stored_bytes": float(store.bytes_stored),
+            "n_stored_columns": float(len(store.columns)),
+        },
+    )
+    if return_store:
+        return result, store
+    return result
+
+
+def self_owner_of(store: PivotStore, adapter: DimensionAdapter, low: int) -> int:
+    """Column id that owns pivot ``low`` (committed or trivial)."""
+    idx = store.low_to_idx.get(low)
+    if idx is not None:
+        return store.col_ids[idx]
+    return int(adapter.owner_of_low(np.array([low], dtype=np.int64))[0])
+
+
+def store_gens(store: PivotStore, low: int) -> np.ndarray:
+    """V(owner) for implicit bookkeeping (empty for trivial/explicit owners)."""
+    idx = store.low_to_idx.get(low)
+    if idx is not None and store.mode == "implicit":
+        return store.columns[idx]
+    return np.zeros(0, dtype=np.int64)

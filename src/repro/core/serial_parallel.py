@@ -1,0 +1,165 @@
+"""Serial-parallel batched reduction (Dory §4.4).
+
+Rather than reducing one column at a time, a *batch* of B columns is
+processed per round:
+
+* **parallel** phase — every batch column is reduced against the already
+  committed ``R^⊥`` (and against trivial owners) independently; this is the
+  embarrassingly-parallel part the paper maps to threads and we map to
+  vectorized/batched work (and, in ``jax_engine.py``, to the ``data`` mesh
+  axis via ``shard_map``).
+* **serial** phase — intra-batch pivot collisions are resolved in filtration
+  order: a column may only absorb a *marked* (fully reduced) earlier batch
+  mate, falling back to the parallel rule whenever its new low re-enters the
+  committed table (paper Fig. 14-15 precedence rules).
+* **clearance** — all resolved columns commit pivots/pairs at once and the
+  batch window slides.
+
+Semantics are identical to the single-column engine (asserted in tests); the
+batch size trades parallel width against serial-merge work, matching the
+paper's batch-size hyperparameter discussion.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from .pairing import EMPTY_KEY
+from .reduction import (DimensionAdapter, PivotStore, ReductionResult,
+                        merge_cancel)
+
+
+def _reduce_vs_store(store: PivotStore, adapter: DimensionAdapter,
+                     r: np.ndarray, col_id: int,
+                     gens: Dict[int, int]) -> np.ndarray:
+    """Reduce r against committed pivots + trivial owners until its low is
+    fresh (the parallel-phase rule).  Returns the partially-reduced r."""
+    while r.size:
+        low = int(r[0])
+        addend = store.lookup_addend(low, col_id)
+        if addend is None:
+            break
+        owner = _owner_id(store, adapter, low)
+        gens[owner] = gens.get(owner, 0) + 1
+        for g in _owner_gens(store, low):
+            gens[int(g)] = gens.get(int(g), 0) + 1
+        r = merge_cancel(r, addend)
+    return r
+
+
+def _owner_id(store: PivotStore, adapter: DimensionAdapter, low: int) -> int:
+    idx = store.low_to_idx.get(low)
+    if idx is not None:
+        return store.col_ids[idx]
+    return int(adapter.owner_of_low(np.array([low], dtype=np.int64))[0])
+
+
+def _owner_gens(store: PivotStore, low: int) -> np.ndarray:
+    idx = store.low_to_idx.get(low)
+    if idx is not None and store.mode == "implicit":
+        return store.columns[idx]
+    return np.zeros(0, dtype=np.int64)
+
+
+def reduce_dimension_batched(
+    adapter: DimensionAdapter,
+    column_ids: np.ndarray,
+    mode: str = "explicit",
+    cleared: Optional[set] = None,
+    batch_size: int = 128,
+) -> ReductionResult:
+    store = PivotStore(adapter, mode)
+    pairs: List[tuple] = []
+    essentials: List[float] = []
+    n_reductions = 0
+    cleared = cleared or set()
+    queue = np.array([c for c in column_ids if int(c) not in cleared],
+                     dtype=np.int64)
+
+    for s in range(0, len(queue), batch_size):
+        ids = queue[s:s + batch_size]
+        B = len(ids)
+        # ---- materialize coboundaries for the whole batch (vectorized) ----
+        cob = adapter.cobdy(ids)
+        rs: List[np.ndarray] = [row[row != EMPTY_KEY] for row in cob]
+        gens: List[Dict[int, int]] = [dict() for _ in range(B)]
+        marked = [False] * B
+        empty = [False] * B
+
+        # ---- parallel phase ----
+        for i in range(B):
+            rs[i] = _reduce_vs_store(store, adapter, rs[i], int(ids[i]), gens[i])
+            n_reductions += 1
+
+        # ---- serial phase (in filtration order within the batch) ----
+        for i in range(B):
+            r = rs[i]
+            while True:
+                if r.size == 0:
+                    empty[i] = True
+                    break
+                low = int(r[0])
+                addend = store.lookup_addend(low, int(ids[i]))
+                if addend is not None:
+                    owner = _owner_id(store, adapter, low)
+                    gens[i][owner] = gens[i].get(owner, 0) + 1
+                    for g in _owner_gens(store, low):
+                        gens[i][int(g)] = gens[i].get(int(g), 0) + 1
+                    r = merge_cancel(r, addend)
+                    n_reductions += 1
+                    continue
+                # look for an earlier, marked batch mate with the same low
+                hit = None
+                for j in range(i):
+                    if marked[j] and not empty[j] and rs[j].size and \
+                            int(rs[j][0]) == low:
+                        hit = j
+                        break
+                if hit is None:
+                    marked[i] = True
+                    break
+                j = hit
+                jid = int(ids[j])
+                gens[i][jid] = gens[i].get(jid, 0) + 1
+                for g, p in gens[j].items():
+                    gens[i][g] = gens[i].get(g, 0) + p
+                r = merge_cancel(r, rs[j])
+                n_reductions += 1
+            rs[i] = r
+
+        # ---- clearance: commit the whole batch ----
+        for i in range(B):
+            col_id = int(ids[i])
+            if empty[i]:
+                essentials.append(float(
+                    adapter.birth_value(np.array([col_id], dtype=np.int64))[0]))
+                continue
+            low = int(rs[i][0])
+            mc = int(adapter.min_cobdy(np.array([col_id], dtype=np.int64))[0])
+            owner = int(adapter.owner_of_low(np.array([low], dtype=np.int64))[0])
+            trivial = (mc == low) and (owner == col_id)
+            g = np.array([k for k, p in gens[i].items() if p % 2 == 1],
+                         dtype=np.int64)
+            store.commit(low, col_id, rs[i], g, trivial)
+            b = float(adapter.birth_value(np.array([col_id], dtype=np.int64))[0])
+            d = float(adapter.death_value(np.array([low], dtype=np.int64))[0])
+            pairs.append((b, d, low))
+
+    pair_arr = np.array([(b, d) for b, d, _ in pairs if d > b],
+                        dtype=np.float64).reshape(-1, 2)
+    pivot_lows = np.array([low for _, _, low in pairs], dtype=np.int64)
+    return ReductionResult(
+        pairs=pair_arr,
+        essentials=np.array(essentials, dtype=np.float64),
+        pivot_lows=pivot_lows,
+        stats={
+            "n_columns": float(len(queue)),
+            "n_reductions": float(n_reductions),
+            "n_pairs": float(len(pairs)),
+            "n_essential": float(len(essentials)),
+            "stored_bytes": float(store.bytes_stored),
+            "n_stored_columns": float(len(store.columns)),
+            "batch_size": float(batch_size),
+        },
+    )

@@ -1,0 +1,1 @@
+"""Data substrates: point clouds (paper benchmarks) + LM token pipeline."""

@@ -1,0 +1,3 @@
+"""Pallas TPU kernels for the compute hot spots (pairwise distances, GF(2)
+bit-packed reduction, flash attention) with jit wrappers (ops) and pure-jnp
+oracles (ref)."""

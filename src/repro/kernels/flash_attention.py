@@ -1,0 +1,91 @@
+"""Pallas TPU kernel: blocked (flash) attention with causal/local masking.
+
+The LM substrate's dominant compute is attention; this kernel computes
+softmax(QK^T / sqrt(d)) V without materializing the (S, S) score matrix,
+using the online-softmax recurrence over KV blocks.
+
+Grid: (batch*heads, S_q / block_q); each step loops KV blocks
+(S_k / block_k) with running (max, sum, acc) carries in VMEM.  Tiles:
+q (block_q, d), k/v (block_k, d), acc (block_q, d) — for block 128 and
+d = 128 the working set is ~0.4 MB, MXU-aligned on every contraction.
+
+GQA: callers map over KV groups (see ops.attention), so the kernel sees one
+query group per KV head.  Local (sliding-window) masks cover the gemma3 /
+recurrentgemma local-attention layers; ``window < 0`` means global.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, block_k: int, seq_k: int,
+                  causal: bool, window: int, sm_scale: float):
+    q = q_ref[0].astype(jnp.float32) * sm_scale          # (bq, d)
+    bq, d = q.shape
+    q_idx = pl.program_id(1) * bq + jax.lax.broadcasted_iota(
+        jnp.int32, (bq, block_k), 0)
+
+    def body(kb, carry):
+        m_prev, l_prev, acc = carry
+        k = k_ref[0, pl.dslice(kb * block_k, block_k), :].astype(jnp.float32)
+        v = v_ref[0, pl.dslice(kb * block_k, block_k), :].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        k_idx = kb * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, (bq, block_k), 1)
+        mask = jnp.ones_like(s, dtype=bool)
+        if causal:
+            mask &= k_idx <= q_idx
+        if window > 0:
+            mask &= (q_idx - k_idx) < window
+        s = jnp.where(mask, s, NEG_INF)
+        m_cur = jnp.maximum(m_prev, s.max(axis=1))
+        alpha = jnp.exp(m_prev - m_cur)
+        p = jnp.exp(s - m_cur[:, None])
+        l_cur = l_prev * alpha + p.sum(axis=1)
+        acc = acc * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        return m_cur, l_cur, acc
+
+    n_kb = seq_k // block_k
+    m0 = jnp.full((bq,), NEG_INF, dtype=jnp.float32)
+    l0 = jnp.zeros((bq,), dtype=jnp.float32)
+    acc0 = jnp.zeros((bq, d), dtype=jnp.float32)
+    m, l, acc = jax.lax.fori_loop(0, n_kb, body, (m0, l0, acc0))
+    o_ref[0] = (acc / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "block_q", "block_k", "interpret"))
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                    causal: bool = True, window: int = -1,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool = True) -> jnp.ndarray:
+    """q, k, v: (BH, S, d) with matching head counts (GQA pre-expanded).
+
+    S must divide by the block sizes (ops.attention pads).
+    """
+    bh, s, d = q.shape
+    assert s % block_q == 0 and s % block_k == 0, (s, block_q, block_k)
+    sm_scale = 1.0 / (d ** 0.5)
+    kernel = functools.partial(
+        _flash_kernel, block_k=block_k, seq_k=s, causal=causal,
+        window=window, sm_scale=sm_scale)
+    return pl.pallas_call(
+        kernel,
+        grid=(bh, s // block_q),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, s, d), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((1, s, d), lambda b, i: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda b, i: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, d), q.dtype),
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,386 @@
+# Multi-pod dry-run: these two lines MUST run before any other import —
+# jax locks the device count on first backend init (task spec step 0).
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Dry-run every (architecture x input-shape x mesh) cell.
+
+For each cell we ``jax.jit(step).lower(**ShapeDtypeStructs).compile()`` on the
+production meshes — single-pod (data=16, model=16) = 256 chips and multi-pod
+(pod=2, data=16, model=16) = 512 chips — and record:
+
+* ``compiled.memory_analysis()``   — proves the cell fits 16 GB/chip HBM;
+* ``compiled.cost_analysis()``     — per-device HLO FLOPs / bytes (verified
+  empirically: XLA reports the post-SPMD per-device module);
+* collective link-bytes            — parsed from ``compiled.as_text()`` by
+  ``launch/hlo.py`` (ring-algorithm bytes, loop-trip weighted, ICI/DCN split);
+* the three roofline terms         — compute / memory / collective seconds on
+  TPU v5e constants (197 TF/s bf16, 819 GB/s HBM, 50 GB/s/link ICI, and an
+  assumed 25 GB/s/chip DCN for the pod axis);
+* MODEL_FLOPS = 6·N_active·D (train) / 2·N_active·D (inference) and the
+  useful-compute ratio MODEL_FLOPS / (HLO_FLOPs · chips).
+
+Artifacts land in ``benchmarks/artifacts/dryrun/<mesh>/<arch>__<shape>.json``;
+``benchmarks/roofline.py`` renders EXPERIMENTS.md §Roofline from them.
+
+Usage::
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-0.6b \
+        --shape train_4k --mesh single
+    PYTHONPATH=src python -m repro.launch.dryrun --sweep --mesh both
+"""
+import argparse
+import dataclasses
+import json
+import subprocess
+import sys
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+# TPU v5e roofline constants (task spec)
+PEAK_FLOPS = 197e12        # bf16 FLOP/s per chip
+HBM_BW = 819e9             # bytes/s per chip
+ICI_BW = 50e9              # bytes/s per link
+DCN_BW = 25e9              # bytes/s per chip across pods (assumption, noted)
+
+ARTIFACT_DIR = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.dirname(
+        os.path.dirname(os.path.abspath(__file__))))),
+    "benchmarks", "artifacts", "dryrun")
+
+
+def roofline_terms(per_dev_flops: float, per_dev_bytes: float,
+                   coll: Dict[str, float]) -> Dict[str, float]:
+    ici = coll.get("ici", 0.0)
+    dcn = coll.get("dcn", 0.0)
+    return {
+        "compute_s": per_dev_flops / PEAK_FLOPS,
+        "memory_s": per_dev_bytes / HBM_BW,
+        "collective_s": ici / ICI_BW + dcn / DCN_BW,
+        "collective_ici_s": ici / ICI_BW,
+        "collective_dcn_s": dcn / DCN_BW,
+    }
+
+
+def run_cell(arch: str, shape: str, mesh_kind: str,
+             overrides: Optional[dict] = None,
+             save_hlo: bool = False) -> Dict[str, Any]:
+    """Lower + compile one cell; return the roofline record."""
+    import jax
+    from repro.configs import canonical, cells
+    from repro.launch.hlo import analyze_module
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.specs import build_cell
+
+    arch = canonical(arch)
+    cell_specs = cells(arch)
+    spec = cell_specs[shape]
+    rec: Dict[str, Any] = dict(arch=arch, shape=shape, mesh=mesh_kind,
+                               overrides=overrides or {})
+    if spec["skip"]:
+        rec.update(status="skip", skip_reason=spec["skip_reason"])
+        return rec
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    chips = mesh.devices.size
+    pod_size = 256 if mesh_kind == "multi" else chips
+
+    t0 = time.time()
+    cell = build_cell(arch, shape, mesh, overrides=overrides)
+    with mesh:
+        jitted = jax.jit(cell.fn,
+                         in_shardings=cell.in_shardings,
+                         out_shardings=cell.out_shardings,
+                         donate_argnums=cell.donate_argnums)
+        lowered = jitted.lower(*cell.args)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    hlo_text = compiled.as_text()
+    # trip-weighted per-device costs from the post-SPMD HLO; XLA's
+    # cost_analysis counts loop bodies once (see launch/hlo.py docstring)
+    parsed = analyze_module(hlo_text, pod_size=pod_size)
+    coll = {k: parsed.get(k, 0.0) for k in ("ici", "dcn", "total")}
+
+    per_dev_flops = float(parsed["flops"])
+    per_dev_bytes = float(parsed["traffic_bytes"])
+    terms = roofline_terms(per_dev_flops, per_dev_bytes, coll)
+    dominant = max(("compute_s", "memory_s", "collective_s"),
+                   key=lambda k: terms[k])
+    model_flops = cell.meta["model_flops"]
+    hlo_total_flops = per_dev_flops * chips
+    bound_s = max(terms["compute_s"], terms["memory_s"],
+                  terms["collective_s"])
+    mfu_bound = (model_flops / PEAK_FLOPS / chips) / bound_s \
+        if bound_s > 0 else 0.0
+
+    rec.update(
+        status="ok",
+        kind=cell.kind,
+        chips=chips,
+        lower_s=round(t_lower, 2),
+        compile_s=round(t_compile, 2),
+        memory=dict(
+            argument_bytes=mem.argument_size_in_bytes,
+            output_bytes=mem.output_size_in_bytes,
+            temp_bytes=mem.temp_size_in_bytes,
+            alias_bytes=mem.alias_size_in_bytes,
+            code_bytes=mem.generated_code_size_in_bytes,
+            peak_bytes=(mem.argument_size_in_bytes
+                        + mem.output_size_in_bytes
+                        + mem.temp_size_in_bytes
+                        - mem.alias_size_in_bytes),
+        ),
+        cost=dict(per_device_flops=per_dev_flops,
+                  per_device_bytes=per_dev_bytes,
+                  total_flops=hlo_total_flops,
+                  xla_unweighted_flops=float(cost.get("flops", 0.0)),
+                  xla_unweighted_bytes=float(
+                      cost.get("bytes accessed", 0.0))),
+        collectives={k: v for k, v in parsed.items()
+                     if not k.startswith(("flops", "traffic"))},
+        roofline=dict(
+            terms, dominant=dominant,
+            model_flops=model_flops,
+            useful_flop_ratio=(model_flops / hlo_total_flops
+                               if hlo_total_flops else 0.0),
+            mfu_upper_bound=mfu_bound),
+        meta=dict(params=cell.meta["params"],
+                  n_micro=cell.meta.get("n_micro"),
+                  seq_len=cell.meta["seq_len"],
+                  global_batch=cell.meta["global_batch"],
+                  sharding_report=cell.meta.get("sharding_report", [])[:40]),
+    )
+    if save_hlo:
+        rec["hlo_path"] = _artifact_path(arch, shape, mesh_kind,
+                                         suffix=".hlo.txt")
+        os.makedirs(os.path.dirname(rec["hlo_path"]), exist_ok=True)
+        with open(rec["hlo_path"], "w") as f:
+            f.write(hlo_text)
+    return rec
+
+
+PH_SHAPES = {
+    # (columns per device, column width in keys, pivot-table entries)
+    "ph_round_64k": dict(b_per_dev=256, width=64, n_pivots=2**20),
+    "ph_round_wide": dict(b_per_dev=1024, width=128, n_pivots=2**22),
+}
+
+
+def run_ph_cell(shape: str, mesh_kind: str,
+                overrides: Optional[dict] = None,
+                save_hlo: bool = False) -> Dict[str, Any]:
+    """Dry-run the paper's distributed serial-parallel reduction round —
+    the cell most representative of the paper's technique (§Perf cell C).
+
+    The PH engine uses a flat data view of the pod (all chips on the batch
+    axis: the serial-parallel batch IS the parallelism); columns are padded
+    sorted paired-index key arrays, the pivot table is replicated.
+    """
+    import jax
+    import numpy as np
+    from jax.sharding import Mesh
+    from repro.core import jax_engine as je
+    from repro.launch.hlo import analyze_module
+
+    p = dict(PH_SHAPES[shape])
+    if overrides:
+        p.update(overrides)
+    devices = jax.devices()
+    if mesh_kind == "multi":
+        mesh = Mesh(np.array(devices[:512]).reshape(2, 256),
+                    ("pod", "data"))
+        chips, pod_size = 512, 256
+    else:
+        mesh = Mesh(np.array(devices[:256]).reshape(256,), ("data",))
+        chips, pod_size = 256, 256
+
+    b_total = p["b_per_dev"] * chips
+    w, n_piv = p["width"], p["n_pivots"]
+    round_fn = je.make_distributed_round(
+        mesh, n_parallel_iters=p.get("n_parallel_iters", 8))
+    cols = jax.ShapeDtypeStruct((b_total, w), np.int64)
+    pivot_keys = jax.ShapeDtypeStruct((n_piv,), np.int64)
+    pivot_cols = jax.ShapeDtypeStruct((n_piv, w), np.int64)
+
+    t0 = time.time()
+    with mesh:
+        lowered = jax.jit(round_fn).lower(cols, pivot_keys, pivot_cols)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+    mem = compiled.memory_analysis()
+    hlo_text = compiled.as_text()
+    parsed = analyze_module(hlo_text, pod_size=pod_size)
+    coll = {k: parsed.get(k, 0.0) for k in ("ici", "dcn", "total")}
+    terms = roofline_terms(parsed["flops"], parsed["traffic_bytes"], coll)
+    dominant = max(("compute_s", "memory_s", "collective_s"),
+                   key=lambda k: terms[k])
+    rec = dict(
+        arch="dory_ph", shape=shape, mesh=mesh_kind, status="ok",
+        kind="ph_round", chips=chips,
+        lower_s=round(t_lower, 2), compile_s=round(t_compile, 2),
+        memory=dict(argument_bytes=mem.argument_size_in_bytes,
+                    output_bytes=mem.output_size_in_bytes,
+                    temp_bytes=mem.temp_size_in_bytes,
+                    alias_bytes=mem.alias_size_in_bytes,
+                    code_bytes=mem.generated_code_size_in_bytes,
+                    peak_bytes=(mem.argument_size_in_bytes
+                                + mem.output_size_in_bytes
+                                + mem.temp_size_in_bytes
+                                - mem.alias_size_in_bytes)),
+        cost=dict(per_device_flops=parsed["flops"],
+                  per_device_bytes=parsed["traffic_bytes"]),
+        collectives={k: v for k, v in parsed.items()
+                     if not k.startswith(("flops", "traffic"))},
+        roofline=dict(terms, dominant=dominant, model_flops=0.0,
+                      useful_flop_ratio=0.0, mfu_upper_bound=0.0),
+        meta=dict(b_per_dev=p["b_per_dev"], width=w, n_pivots=n_piv,
+                  seq_len=0, global_batch=b_total, params={},
+                  sharding_report=[]),
+        overrides=overrides or {},
+    )
+    if save_hlo:
+        rec["hlo_path"] = _artifact_path("dory_ph", shape, mesh_kind,
+                                         suffix=".hlo.txt")
+        os.makedirs(os.path.dirname(rec["hlo_path"]), exist_ok=True)
+        with open(rec["hlo_path"], "w") as f:
+            f.write(hlo_text)
+    return rec
+
+
+def _artifact_path(arch: str, shape: str, mesh_kind: str,
+                   suffix: str = ".json") -> str:
+    return os.path.join(ARTIFACT_DIR, mesh_kind, f"{arch}__{shape}{suffix}")
+
+
+def save_record(rec: Dict[str, Any]) -> str:
+    path = _artifact_path(rec["arch"], rec["shape"], rec["mesh"])
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    return path
+
+
+def print_summary(rec: Dict[str, Any]) -> None:
+    if rec["status"] == "skip":
+        print(f"[SKIP] {rec['arch']} x {rec['shape']} ({rec['mesh']}): "
+              f"{rec['skip_reason']}")
+        return
+    if rec["status"] != "ok":
+        print(f"[FAIL] {rec['arch']} x {rec['shape']} ({rec['mesh']}): "
+              f"{rec.get('error', '?')}")
+        return
+    m = rec["memory"]
+    r = rec["roofline"]
+    print(f"[ OK ] {rec['arch']} x {rec['shape']} ({rec['mesh']}, "
+          f"{rec['chips']} chips) "
+          f"lower {rec['lower_s']}s compile {rec['compile_s']}s | "
+          f"per-dev peak {m['peak_bytes'] / 2**30:.2f} GiB | "
+          f"compute {r['compute_s'] * 1e3:.2f} ms "
+          f"memory {r['memory_s'] * 1e3:.2f} ms "
+          f"collective {r['collective_s'] * 1e3:.2f} ms "
+          f"-> {r['dominant'].replace('_s', '')}-bound | "
+          f"useful-FLOP {r['useful_flop_ratio']:.2f} "
+          f"MFU<= {r['mfu_upper_bound']:.2f}")
+
+
+def _sweep(mesh_kinds, archs, shapes, jobs: int) -> int:
+    """Run every cell in a subprocess (isolation: one OOM/crash cannot take
+    down the sweep — the fault-tolerance story applied to the tooling)."""
+    tasks = [(a, s, m) for m in mesh_kinds for a in archs for s in shapes]
+    failures = 0
+    running: list = []
+
+    def reap(block: bool) -> int:
+        nonlocal failures
+        done = []
+        for p, desc in running:
+            if p.poll() is not None or block:
+                p.wait()
+                if p.returncode != 0:
+                    failures += 1
+                    print(f"[FAIL] {desc} (exit {p.returncode})")
+                done.append((p, desc))
+        for item in done:
+            running.remove(item)
+        return len(done)
+
+    for arch, shape, mesh_kind in tasks:
+        while len(running) >= jobs:
+            if not reap(block=False):
+                time.sleep(2)
+        cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+               "--shape", shape, "--mesh", mesh_kind]
+        running.append((subprocess.Popen(cmd), f"{arch} x {shape} "
+                        f"({mesh_kind})"))
+    while running:
+        if not reap(block=False):
+            time.sleep(2)
+    return failures
+
+
+def main() -> None:
+    from repro.configs import ARCHS, SHAPES
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=("single", "multi", "both"),
+                    default="single")
+    ap.add_argument("--sweep", action="store_true",
+                    help="all (arch x shape) cells, one subprocess each")
+    ap.add_argument("--jobs", type=int, default=2)
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--override", action="append", default=[],
+                    help="cfg overrides key=value (perf experiments)")
+    args = ap.parse_args()
+
+    mesh_kinds = ("single", "multi") if args.mesh == "both" else (args.mesh,)
+    if args.sweep:
+        archs = [args.arch] if args.arch else list(ARCHS)
+        shapes = [args.shape] if args.shape else list(SHAPES)
+        failures = _sweep(mesh_kinds, archs, shapes, args.jobs)
+        print(f"sweep done, {failures} failures")
+        sys.exit(1 if failures else 0)
+
+    assert args.arch and args.shape, "--arch/--shape or --sweep"
+    overrides = {}
+    for kv in args.override:
+        k, v = kv.split("=", 1)
+        try:
+            v = json.loads(v)
+        except json.JSONDecodeError:
+            pass
+        overrides[k] = v
+
+    rc = 0
+    for mesh_kind in mesh_kinds:
+        try:
+            if args.arch == "dory_ph":
+                rec = run_ph_cell(args.shape, mesh_kind,
+                                  overrides=overrides or None,
+                                  save_hlo=args.save_hlo)
+            else:
+                rec = run_cell(args.arch, args.shape, mesh_kind,
+                               overrides=overrides or None,
+                               save_hlo=args.save_hlo)
+        except Exception as e:  # noqa: BLE001 — record, report, nonzero exit
+            rec = dict(arch=args.arch, shape=args.shape, mesh=mesh_kind,
+                       status="error", error=f"{type(e).__name__}: {e}",
+                       traceback=traceback.format_exc()[-4000:])
+            rc = 1
+        if not overrides:
+            save_record(rec)
+        print_summary(rec)
+    sys.exit(rc)
+
+
+if __name__ == "__main__":
+    main()

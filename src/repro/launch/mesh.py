@@ -1,0 +1,38 @@
+"""Production meshes.
+
+Single pod: (data=16, model=16) = 256 chips (TPU v5e pod, ICI).
+Multi pod:  (pod=2, data=16, model=16) = 512 chips; ``pod`` is the DCN axis.
+
+``make_production_mesh`` is a FUNCTION (importing this module never touches
+jax device state).  The dry-run process forces 512 host devices; the
+single-pod mesh then uses the first 256, so both meshes build in one process.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) == n:
+        return jax.make_mesh(shape, axes)
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for mesh {dict(zip(axes, shape))}, have "
+            f"{len(devices)} — run under "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=512 "
+            "(launch/dryrun.py sets this)")
+    return Mesh(np.array(devices[:n]).reshape(shape), axes)
+
+
+def make_mesh(shape, axes) -> Mesh:
+    """Arbitrary mesh over the first prod(shape) devices (tests/elastic)."""
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    assert len(devices) >= n, (len(devices), shape)
+    return Mesh(np.array(devices[:n]).reshape(shape), axes)

@@ -1,0 +1,262 @@
+"""Per-cell build: (arch × input-shape × mesh) -> jittable fn + ShapeDtypeStruct
+inputs + in/out shardings.
+
+Shape semantics (task spec): ``train_*`` lowers ``train_step``;
+``prefill_*`` lowers the batched prefill; ``decode_*`` / ``long_*`` lower
+``serve_step`` (one new token against a KV cache of ``seq_len``).  Whisper
+(enc-dec) splits every cell's budget S into S_enc = S_dec = S/2 (DESIGN.md);
+VLM cells feed precomputed patch embeddings + (3, B, S) M-RoPE grids —
+modality frontends are stubs per the task spec.
+
+``input_specs`` returns weak-type-correct ShapeDtypeStructs only — nothing
+here allocates; params/optimizer/cache shapes come from ``jax.eval_shape``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPES, get_config
+from repro.dist.sharding import (activation_rules, batch_specs,
+                                 bind_activation_rules, cache_specs,
+                                 shard_params, shardings_from_specs,
+                                 tree_path_str)
+from repro.models.config import ModelConfig
+from repro.models.transformer import init_params, make_cache
+from repro.serve.steps import make_decode_step, make_prefill_step
+from repro.train.optimizer import AdamW, warmup_cosine
+from repro.train.train_step import TrainState, make_train_step
+from repro.train.optimizer import AdamWState
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(int(x) for x in shape), dtype)
+
+
+# ---------------------------------------------------------------------------
+# input specs
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ModelConfig, kind: str, seq_len: int, batch: int
+                ) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for the model's *data* inputs."""
+    d = cfg.d_model
+    if cfg.enc_dec:
+        s_enc = seq_len // 2
+        s_dec = seq_len // 2
+        if kind == "train":
+            return {"tokens": sds((batch, s_dec + 1), jnp.int32),
+                    "enc_embeds": sds((batch, s_enc, d), cfg.cdtype)}
+        if kind == "prefill":
+            return {"tokens": sds((batch, s_dec), jnp.int32),
+                    "enc_embeds": sds((batch, s_enc, d), cfg.cdtype)}
+        # decode: one decoder token; cross-attends cached encoder output
+        return {"tokens": sds((batch, 1), jnp.int32),
+                "cache_pos": sds((), jnp.int32)}
+    if cfg.input_kind != "tokens":                    # vlm: patch embeddings
+        if kind == "train":
+            out = {"embeds": sds((batch, seq_len, d), cfg.cdtype),
+                   "labels": sds((batch, seq_len), jnp.int32)}
+        elif kind == "prefill":
+            out = {"embeds": sds((batch, seq_len, d), cfg.cdtype)}
+        else:
+            out = {"embeds": sds((batch, 1, d), cfg.cdtype),
+                   "cache_pos": sds((), jnp.int32)}
+        s = seq_len if kind in ("train", "prefill") else 1
+        if cfg.rope_kind == "mrope":
+            out["positions3"] = sds((3, batch, s), jnp.int32)
+        return out
+    if kind == "train":
+        return {"tokens": sds((batch, seq_len + 1), jnp.int32)}
+    if kind == "prefill":
+        return {"tokens": sds((batch, seq_len), jnp.int32)}
+    return {"tokens": sds((batch, 1), jnp.int32),
+            "cache_pos": sds((), jnp.int32)}
+
+
+def cache_shapes(cfg: ModelConfig, batch: int, s_max: int):
+    """Decode-cache ShapeDtypeStructs (eval_shape — no allocation)."""
+    s_cache = s_max // 2 if cfg.enc_dec else s_max
+
+    def build():
+        # enc-dec decode reads cached cross-K/V (computed at prefill), so
+        # the raw encoder output no longer rides in the decode cache
+        return make_cache(cfg, batch, s_cache, enc_out=None)
+
+    return jax.eval_shape(build)
+
+
+# ---------------------------------------------------------------------------
+# parameter / FLOP accounting
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def param_shapes(cfg: ModelConfig):
+    return jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+
+
+def count_params(cfg: ModelConfig) -> Dict[str, float]:
+    """total / embedding / routed-expert / active parameter counts."""
+    shapes = param_shapes(cfg)
+    flat = jax.tree_util.tree_flatten_with_path(shapes)[0]
+    total = emb = routed = 0
+    for kp, leaf in flat:
+        path = tree_path_str(kp)
+        n = int(np.prod(leaf.shape))
+        total += n
+        name = path.split("/")[-1]
+        if path in ("embed/table", "lm_head/table"):
+            emb += n
+        elif name in ("w_gate", "w_up", "w_down") and leaf.ndim >= 4:
+            routed += n          # stacked (reps, E, d, f) routed experts
+    active = total
+    if cfg.moe is not None and routed:
+        frac = cfg.moe.top_k / cfg.moe.n_experts
+        active = total - routed * (1.0 - frac)
+    return {"total": float(total), "embedding": float(emb),
+            "routed_expert": float(routed), "active": float(active)}
+
+
+def model_flops(cfg: ModelConfig, kind: str, seq_len: int, batch: int
+                ) -> float:
+    """MODEL_FLOPS = 6·N_active·D (train) / 2·N_active·D (inference), with
+    N = non-embedding active params and D = processed tokens (task spec)."""
+    c = count_params(cfg)
+    n = c["active"] - c["embedding"]
+    if cfg.enc_dec:
+        tokens = batch * (seq_len // 2) if kind != "decode" else batch
+    elif kind == "decode":
+        tokens = batch
+    else:
+        tokens = batch * seq_len
+    mult = 6.0 if kind == "train" else 2.0
+    return mult * n * tokens
+
+
+# ---------------------------------------------------------------------------
+# per-cell assembly
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape: str
+    kind: str                       # train | prefill | decode
+    fn: Callable                    # jit-able step
+    args: Tuple[Any, ...]           # ShapeDtypeStruct pytrees
+    in_shardings: Tuple[Any, ...]
+    out_shardings: Any
+    meta: Dict[str, Any]
+    static_argnums: Tuple[int, ...] = ()
+    donate_argnums: Tuple[int, ...] = ()
+
+
+def _dp_size(mesh: Mesh) -> int:
+    return int(np.prod([mesh.shape[a] for a in ("pod", "data")
+                        if a in mesh.axis_names]))
+
+
+def train_micro(cfg: ModelConfig, mesh: Mesh, global_batch: int) -> int:
+    """Microbatch count: per-device-per-micro batch of 1 (max remat win),
+    subject to (B / n_micro) % dp == 0."""
+    dp = _dp_size(mesh)
+    n_micro = max(1, global_batch // dp)
+    while global_batch % n_micro or (global_batch // n_micro) % dp:
+        n_micro -= 1
+    return n_micro
+
+
+def build_cell(arch: str, shape: str, mesh: Mesh,
+               overrides: Optional[dict] = None) -> Cell:
+    spec = SHAPES[shape]
+    kind, seq_len, batch = spec["kind"], spec["seq_len"], spec["global_batch"]
+    cfg = get_config(arch)
+    force_n_micro = None
+    if overrides:
+        overrides = dict(overrides)
+        force_n_micro = overrides.pop("n_micro", None)
+        cfg = dataclasses.replace(cfg, **overrides)
+    meta: Dict[str, Any] = dict(
+        arch=arch, shape=shape, kind=kind, seq_len=seq_len,
+        global_batch=batch, params=count_params(cfg),
+        model_flops=model_flops(cfg, kind, seq_len, batch))
+    heads = {"q": cfg.n_heads, "kv": cfg.n_kv_heads}
+    act_rules = activation_rules(cfg, mesh, decode=(kind == "decode"),
+                                 batch=batch)
+    meta["activation_rules"] = {k: str(v) for k, v in act_rules.items()}
+
+    if kind == "train":
+        cfg = dataclasses.replace(cfg, remat=cfg.remat if cfg.remat != "none"
+                                  else "full")
+        n_micro = force_n_micro or train_micro(cfg, mesh, batch)
+        meta["n_micro"] = n_micro
+        opt = AdamW(lr=warmup_cosine(3e-4, 100, 10_000))
+        dp_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+        step_fn = make_train_step(cfg, opt, n_micro=n_micro,
+                                  micro_batch_axes=dp_axes)
+        step_fn = bind_activation_rules(step_fn, act_rules)
+        pshapes = param_shapes(cfg)
+        state_shapes = TrainState(
+            params=pshapes,
+            opt=AdamWState(
+                step=sds((), jnp.int32),
+                m=jax.tree.map(lambda l: sds(l.shape, jnp.float32), pshapes),
+                v=jax.tree.map(lambda l: sds(l.shape, jnp.float32), pshapes)))
+        batch_shapes = input_specs(cfg, "train", seq_len, batch)
+
+        pspecs, report = shard_params(pshapes, mesh, fsdp=True, heads=heads)
+        state_specs = TrainState(
+            params=pspecs,
+            opt=AdamWState(step=P(), m=pspecs, v=pspecs))
+        bspecs = batch_specs(batch_shapes, mesh)
+        meta["sharding_report"] = report
+        state_sh = shardings_from_specs(state_specs, mesh)
+        batch_sh = shardings_from_specs(bspecs, mesh)
+        return Cell(arch=arch, shape=shape, kind=kind, fn=step_fn,
+                    args=(state_shapes, batch_shapes),
+                    in_shardings=(state_sh, batch_sh),
+                    out_shardings=(state_sh, None), meta=meta,
+                    donate_argnums=(0,))
+
+    pshapes = param_shapes(cfg)
+    pspecs, report = shard_params(pshapes, mesh, fsdp=False, heads=heads)
+    meta["sharding_report"] = report
+    param_sh = shardings_from_specs(pspecs, mesh)
+
+    if kind == "prefill":
+        step_fn = bind_activation_rules(make_prefill_step(cfg), act_rules)
+        batch_shapes = input_specs(cfg, "prefill", seq_len, batch)
+        bspecs = batch_specs(batch_shapes, mesh)
+        batch_sh = shardings_from_specs(bspecs, mesh)
+        return Cell(arch=arch, shape=shape, kind=kind, fn=step_fn,
+                    args=(pshapes, batch_shapes),
+                    in_shardings=(param_sh, batch_sh),
+                    out_shardings=None, meta=meta)
+
+    # decode / long: serve_step — one token against a seq_len cache
+    step_fn = bind_activation_rules(make_decode_step(cfg), act_rules)
+    cshapes = cache_shapes(cfg, batch, seq_len)
+    batch_shapes = input_specs(cfg, "decode", seq_len, batch)
+    cspecs = {
+        "layers": cache_specs(cshapes["layers"], mesh, seq_len=(
+            seq_len // 2 if cfg.enc_dec else seq_len), batch=batch),
+        # enc_out is None for decoder-only archs; a P() *prefix leaf* matches
+        # the empty subtree so in/out cache pytrees stay congruent
+        "enc_out": (P() if cshapes.get("enc_out") is None else
+                    batch_specs({"e": cshapes["enc_out"]}, mesh)["e"]),
+    }
+    bspecs = batch_specs(batch_shapes, mesh)
+    cache_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), cspecs,
+                            is_leaf=lambda x: isinstance(x, P))
+    batch_sh = shardings_from_specs(bspecs, mesh)
+    return Cell(arch=arch, shape=shape, kind=kind, fn=step_fn,
+                args=(pshapes, cshapes, batch_shapes),
+                in_shardings=(param_sh, cache_sh, batch_sh),
+                out_shardings=(None, cache_sh), meta=meta,
+                donate_argnums=(1,))

@@ -1,0 +1,200 @@
+"""End-to-end training driver.
+
+Runs any registered architecture (full or ``--reduced``) on the local
+device(s): data pipeline -> sharded train state -> jitted microbatched step
+-> async checkpointing -> metrics, with optional TDA monitoring (the paper's
+technique applied to the model's own hidden states: persistence diagrams of
+the final-layer activation point cloud, logged every ``--tda-every`` steps).
+
+On CPU this trains reduced configs end-to-end (examples/train_lm.py drives a
+~27M model a few hundred steps and asserts the loss drops); on a real TPU
+mesh the same file is the production entry point — the mesh/sharding plumbing
+is identical to the dry-run's (launch/specs.py).
+
+Usage::
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-0.6b --reduced \
+        --steps 200 --batch 32 --seq 128 --ckpt-dir /tmp/ckpt
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import Checkpointer
+from repro.configs import get_config
+from repro.data.tokens import ShardedTokenStream
+from repro.dist.sharding import (activation_rules, batch_specs,
+                                 bind_activation_rules, shard_params,
+                                 shardings_from_specs)
+from repro.launch.mesh import make_mesh
+from repro.models.config import ModelConfig
+from repro.train.optimizer import AdamW, warmup_cosine
+from repro.train.train_step import (TrainState, init_train_state,
+                                    make_train_step)
+
+
+@dataclasses.dataclass
+class TrainJob:
+    cfg: ModelConfig
+    steps: int = 100
+    global_batch: int = 8
+    seq_len: int = 64
+    n_micro: int = 1
+    lr: float = 3e-4
+    warmup: int = 20
+    seed: int = 0
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 50
+    tda_every: int = 0
+    mesh_shape: Optional[tuple] = None       # e.g. (2, 2) on forced devices
+    log_every: int = 10
+
+
+def tda_monitor(params, cfg: ModelConfig, batch: Dict[str, np.ndarray]
+                ) -> Dict[str, float]:
+    """PH of the final hidden-state point cloud (Dory engine on the model's
+    own representations) — H0/H1 Betti summary at the median pairwise scale."""
+    from repro.core import compute_ph
+    from repro.models.transformer import forward
+
+    sub = {k: jnp.asarray(v[:4]) for k, v in batch.items()}
+    if cfg.input_kind == "tokens":
+        sub["tokens"] = sub["tokens"][:, :-1]
+    logits, _ = forward(params, cfg, sub)
+    # final hidden states ~ logits are too wide; use a random projection
+    x = np.asarray(logits[..., :64], dtype=np.float64)
+    pts = x.reshape(-1, x.shape[-1])[:256]
+    res = compute_ph(points=pts, maxdim=1,
+                     tau_max=float(np.quantile(
+                         np.linalg.norm(pts[:1] - pts, axis=-1), 0.5)) + 1e-6)
+    b = res.betti_at(res.stats.get("tau_med", 0.0))
+    return {"tda_h0_pairs": float(len(res.diagrams[0])),
+            "tda_h1_pairs": float(len(res.diagrams[1])),
+            "tda_b0": float(b.get(0, 0))}
+
+
+def run(job: TrainJob, restore: bool = False) -> Dict[str, Any]:
+    cfg = job.cfg
+    opt = AdamW(lr=warmup_cosine(job.lr, job.warmup, max(job.steps, 2)))
+    key = jax.random.PRNGKey(job.seed)
+
+    mesh = None
+    if job.mesh_shape is not None:
+        axes = ("data", "model")[:len(job.mesh_shape)] \
+            if len(job.mesh_shape) == 2 else ("pod", "data", "model")
+        mesh = make_mesh(job.mesh_shape, axes)
+
+    step_fn = make_train_step(
+        cfg, opt, n_micro=job.n_micro,
+        micro_batch_axes=(tuple(a for a in ("pod", "data")
+                                if a in mesh.axis_names) if mesh else None))
+
+    ckpt = Checkpointer(job.ckpt_dir) if job.ckpt_dir else None
+    start_step = 0
+    state = None
+
+    if mesh is not None:
+        rules = activation_rules(cfg, mesh)
+        step_fn = bind_activation_rules(step_fn, rules)
+        heads = {"q": cfg.n_heads, "kv": cfg.n_kv_heads}
+        with mesh:
+            state = init_train_state(cfg, opt, key)
+            pspecs, _ = shard_params(state.params, mesh, fsdp=True,
+                                     heads=heads)
+            from repro.train.optimizer import AdamWState
+            from jax.sharding import PartitionSpec as P
+            sspecs = TrainState(params=pspecs, opt=AdamWState(
+                step=P(), m=pspecs, v=pspecs))
+            ssh = shardings_from_specs(sspecs, mesh)
+            if restore and ckpt is not None and ckpt.latest_step() is not None:
+                state, meta = ckpt.restore(state, shardings=ssh)
+                start_step = int(meta.get("step", 0)) + 1
+            else:
+                state = jax.device_put(state, ssh)
+            bspecs = batch_specs(
+                {"tokens": jax.ShapeDtypeStruct(
+                    (job.global_batch, job.seq_len + 1), jnp.int32)}, mesh)
+            bsh = shardings_from_specs(bspecs, mesh)
+            jstep = jax.jit(step_fn, in_shardings=(ssh, bsh),
+                            out_shardings=(ssh, None), donate_argnums=(0,))
+    else:
+        state = init_train_state(cfg, opt, key)
+        if restore and ckpt is not None and ckpt.latest_step() is not None:
+            state, meta = ckpt.restore(state)
+            start_step = int(meta.get("step", 0)) + 1
+        jstep = jax.jit(step_fn, donate_argnums=(0,))
+
+    stream = ShardedTokenStream(vocab=cfg.vocab_size,
+                                global_batch=job.global_batch,
+                                seq=job.seq_len + 1, seed=job.seed)
+    history = []
+    t_start = time.perf_counter()
+    for step in range(start_step, job.steps):
+        batch_np = stream.batch_at(step)
+        batch = {k: jnp.asarray(v) for k, v in batch_np.items()}
+        if mesh is not None:
+            with mesh:
+                state, metrics = jstep(state, batch)
+        else:
+            state, metrics = jstep(state, batch)
+        if step % job.log_every == 0 or step == job.steps - 1:
+            m = {k: float(v) for k, v in metrics.items()}
+            m["step"] = step
+            if job.tda_every and step % job.tda_every == 0:
+                m.update(tda_monitor(state.params, cfg, batch_np))
+            history.append(m)
+            print(json.dumps({k: round(v, 5) if isinstance(v, float) else v
+                              for k, v in m.items()}))
+        if ckpt is not None and step and step % job.ckpt_every == 0:
+            ckpt.save_async(step, state, metadata={"step": step})
+    if ckpt is not None:
+        ckpt.save(job.steps - 1, state, metadata={"step": job.steps - 1})
+        ckpt.wait()
+    wall = time.perf_counter() - t_start
+    return {"history": history, "state": state, "wall_s": wall,
+            "final_loss": history[-1]["loss"] if history else float("nan")}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="qwen3-0.6b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--n-micro", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--restore", action="store_true")
+    ap.add_argument("--tda-every", type=int, default=0)
+    ap.add_argument("--d-model", type=int, default=64,
+                    help="reduced config width")
+    ap.add_argument("--layers", type=int, default=2,
+                    help="reduced config depth")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced(n_layers=args.layers, d_model=args.d_model,
+                          n_heads=max(4, args.d_model // 32),
+                          d_ff=args.d_model * 4)
+    job = TrainJob(cfg=cfg, steps=args.steps, global_batch=args.batch,
+                   seq_len=args.seq, n_micro=args.n_micro, lr=args.lr,
+                   ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
+                   tda_every=args.tda_every)
+    out = run(job, restore=args.restore)
+    print(f"done: {args.steps} steps in {out['wall_s']:.1f}s, "
+          f"final loss {out['final_loss']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

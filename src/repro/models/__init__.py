@@ -1,0 +1,1 @@
+"""Model zoo: config, layers, attention, MoE, SSM blocks, assembly."""

@@ -1,0 +1,344 @@
+"""Attention blocks: GQA/MQA with qk-norm + RoPE/M-RoPE variants, sliding
+windows, DeepSeek-style MLA (compressed KV), cross-attention, and the
+prefill/decode KV-cache paths.
+
+Masking is data-driven (per-layer window scalar; -1 = global) so
+heterogeneous local/global stacks (gemma3, recurrentgemma) scan over a single
+homogeneous param group.  The Pallas flash kernel handles the same masks on
+TPU; the jnp path here is what the dry-run lowers (see kernels/ops.py).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import constrain
+
+from .config import ModelConfig
+from .layers import apply_mrope, apply_rope, dense_init, rmsnorm, rmsnorm_params
+
+NEG_INF = -2.0e38
+
+
+def attn_params(key, cfg: ModelConfig):
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    ks = jax.random.split(key, 6)
+    p = {
+        "wq": dense_init(ks[0], (d, h * hd), dtype=cfg.pdtype),
+        "wk": dense_init(ks[1], (d, kv * hd), dtype=cfg.pdtype),
+        "wv": dense_init(ks[2], (d, kv * hd), dtype=cfg.pdtype),
+        "wo": dense_init(ks[3], (h * hd, d), fan_in=h * hd, dtype=cfg.pdtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = rmsnorm_params(hd, cfg.pdtype)
+        p["k_norm"] = rmsnorm_params(hd, cfg.pdtype)
+    return p
+
+
+def mla_params(key, cfg: ModelConfig):
+    d, h = cfg.d_model, cfg.n_heads
+    m = cfg.mla
+    ks = jax.random.split(key, 6)
+    qk_head = m.nope_head_dim + m.rope_head_dim
+    return {
+        "wq": dense_init(ks[0], (d, h * qk_head), dtype=cfg.pdtype),
+        "w_dkv": dense_init(ks[1], (d, m.kv_lora_rank), dtype=cfg.pdtype),
+        "w_krope": dense_init(ks[2], (d, m.rope_head_dim), dtype=cfg.pdtype),
+        "w_uk": dense_init(ks[3], (m.kv_lora_rank, h * m.nope_head_dim),
+                           fan_in=m.kv_lora_rank, dtype=cfg.pdtype),
+        "w_uv": dense_init(ks[4], (m.kv_lora_rank, h * m.v_head_dim),
+                           fan_in=m.kv_lora_rank, dtype=cfg.pdtype),
+        "wo": dense_init(ks[5], (h * m.v_head_dim, d),
+                         fan_in=h * m.v_head_dim, dtype=cfg.pdtype),
+        "kv_norm": rmsnorm_params(m.kv_lora_rank, cfg.pdtype),
+    }
+
+
+def _mask_bias(q_pos, k_pos, window, causal=True):
+    """(.., Sq, Sk) additive bias from positions; window traced scalar."""
+    diff = q_pos[..., :, None] - k_pos[..., None, :]
+    ok = jnp.ones(diff.shape, dtype=bool)
+    if causal:
+        ok &= diff >= 0
+    ok &= (window < 0) | (diff < jnp.maximum(window, 1))
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def _sdpa(q, k, v, bias):
+    """q: (B,Sq,H,D) k/v: (B,Sk,KV,D').
+
+    Two GQA layouts, chosen by phase:
+
+    * **train/prefill** (Sq > 1): KV is broadcast to the full head count
+      instead of reshape-grouping q into (kv, group) — the 5-D grouped
+      einsum defeats SPMD propagation whenever kv_heads doesn't divide the
+      model axis (involuntary full rematerialization — a 451 GB/step
+      collective on qwen3 train_4k before this change).  The repeat is free
+      under TP: KV is small and each device slices only its own heads.
+    * **decode** (Sq == 1): grouped einsum against the *sequence-sharded*
+      cache — no repeat (3x cache-traffic saving), heads unsharded, softmax
+      and context reduce over the sharded KV axis (XLA inserts the small
+      per-token all-reduces).  See EXPERIMENTS.md §Perf.
+    """
+    b, sq, h, dq = q.shape
+    kvh = k.shape[2]
+    # bf16 operands + f32 accumulation (preferred_element_type) — upcasting
+    # K/V to f32 made XLA keep a full f32 copy of the decode cache in the
+    # layer-scan carry and reconvert the whole stack every iteration
+    # (~160 GB/step of traffic on decode_32k; EXPERIMENTS.md §Perf).
+    f32 = jnp.float32
+    scale = 1.0 / jnp.sqrt(f32(dq))
+    if sq == 1 and kvh != h:
+        g = h // kvh
+        qg = q.reshape(b, sq, kvh, g, dq)
+        k = constrain(k, "batch", "kv_seq", None, None)
+        v = constrain(v, "batch", "kv_seq", None, None)
+        scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k,
+                            preferred_element_type=f32) * scale
+        scores = scores + bias[:, None, None, :, :]
+        probs = jax.nn.softmax(scores, axis=-1)
+        out = jnp.einsum("bhgqk,bkhd->bqhgd", probs.astype(v.dtype), v,
+                         preferred_element_type=f32)
+        return out.reshape(b, sq, h, v.shape[-1])
+    if kvh != h:
+        k = jnp.repeat(k, h // kvh, axis=2)
+        v = jnp.repeat(v, h // kvh, axis=2)
+    k = constrain(k, "batch", "kv_seq", "heads", None)
+    v = constrain(v, "batch", "kv_seq", "heads", None)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                        preferred_element_type=f32) * scale
+    scores = scores + bias[:, None, :, :]
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs.astype(v.dtype), v,
+                     preferred_element_type=f32)
+    return constrain(out, "batch", None, "heads", None)
+
+
+def _q_chunk(sq: int) -> int:
+    """Query-block size for chunked attention (0 = unchunked).
+
+    Full-bias SDPA materializes (B, KV, G, Sq, Sk) fp32 scores — 4.3 GB per
+    (b, h) pair at 32k — so any long-sequence cell must bound live scores to
+    one query block.  This is the jnp analogue of the Pallas flash kernel's
+    grid dimension (kernels/flash_attention.py); XLA sees a ``lax.scan`` and
+    keeps only one block's scores live (remat-friendly, and the memory term
+    in the roofline reflects it)."""
+    if sq <= 2048:
+        return 0
+    return 1024 if sq <= 8192 else 512
+
+
+def _sdpa_masked(q, k, v, q_pos, k_pos, window, causal=True, valid=None):
+    """Mask-from-positions SDPA with automatic query chunking.
+
+    q: (B,Sq,H,D); k/v: (B,Sk,KV,D'); q_pos: (B,Sq); k_pos: (B,Sk) or (Sk,).
+    ``valid`` optionally masks out unwritten cache slots (Sk,)."""
+    sq = q.shape[1]
+    bq = _q_chunk(sq)
+
+    def bias_for(qp):
+        bias = _mask_bias(qp, k_pos, window, causal=causal)
+        if valid is not None:
+            bias = jnp.where(valid[None, None, :], bias, NEG_INF)
+        return bias
+
+    if bq == 0 or sq % bq != 0:
+        return _sdpa(q, k, v, bias_for(q_pos))
+
+    b, _, h, dq = q.shape
+    nb = sq // bq
+    qs = jnp.moveaxis(q.reshape(b, nb, bq, h, dq), 1, 0)
+    qps = jnp.moveaxis(q_pos.reshape(b, nb, bq), 1, 0)
+
+    def body(carry, xs):
+        qb, qpb = xs
+        return carry, _sdpa(qb, k, v, bias_for(qpb))
+
+    _, outs = jax.lax.scan(body, 0, (qs, qps))
+    return jnp.moveaxis(outs, 0, 1).reshape(b, sq, h, v.shape[-1])
+
+
+def attention_apply(params, cfg: ModelConfig, x, positions, window,
+                    cache: Optional[Tuple] = None, cache_pos=None,
+                    positions3=None, causal: bool = True):
+    """Standard GQA attention.  If ``cache`` is given: decode step — x is
+    (B, 1, d), cache=(K, V) with capacity S_max, write at ``cache_pos``."""
+    cdt = cfg.cdtype
+    b, s, d = x.shape
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    x = x.astype(cdt)
+    q = (x @ params["wq"].astype(cdt)).reshape(b, s, h, hd)
+    k = (x @ params["wk"].astype(cdt)).reshape(b, s, kv, hd)
+    v = (x @ params["wv"].astype(cdt)).reshape(b, s, kv, hd)
+    q = constrain(q, "batch", None, "heads", None)
+    k = constrain(k, "batch", None, "kv_heads", None)
+    v = constrain(v, "batch", None, "kv_heads", None)
+    if cfg.qk_norm:
+        q = rmsnorm(params["q_norm"], q, cfg.norm_eps)
+        k = rmsnorm(params["k_norm"], k, cfg.norm_eps)
+    if cfg.rope_kind == "rope":
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    elif cfg.rope_kind == "mrope":
+        q = apply_mrope(q, positions3, cfg.mrope_sections, cfg.rope_theta)
+        k = apply_mrope(k, positions3, cfg.mrope_sections, cfg.rope_theta)
+
+    if cache is None:
+        out = _sdpa_masked(q, k, v, positions, positions, window,
+                           causal=causal)
+        new_cache = (k, v)
+    else:
+        ck, cv = cache
+        # index dtypes must match exactly (int32 even under enabled x64)
+        z = jnp.int32(0)
+        pos = jnp.asarray(cache_pos, jnp.int32)
+        ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype),
+                                          (z, pos, z, z))
+        cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype),
+                                          (z, pos, z, z))
+        s_max = ck.shape[1]
+        k_pos = jnp.arange(s_max, dtype=jnp.int32)              # (S_max,)
+        diff = cache_pos - k_pos
+        ok = diff >= 0                                          # causal/valid
+        ok &= (window < 0) | (diff < jnp.maximum(window, 1))
+        bias = jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+        bias = jnp.broadcast_to(bias[None, None, :], (b, s, s_max))
+        out = _sdpa(q, ck.astype(cdt), cv.astype(cdt), bias)
+        new_cache = (ck, cv)
+    out = out.reshape(b, s, h * hd).astype(cdt)
+    out = constrain(out @ params["wo"].astype(cdt), "batch", None, None)
+    return out, new_cache
+
+
+def mla_apply(params, cfg: ModelConfig, x, positions, window,
+              cache: Optional[Tuple] = None, cache_pos=None):
+    """DeepSeek-V2 Multi-head Latent Attention: KV compressed to
+    ``kv_lora_rank`` (+ shared rotary key head); the cache stores only the
+    latent c_kv and k_rope — the paper's KV-memory saving."""
+    cdt = cfg.cdtype
+    m = cfg.mla
+    b, s, d = x.shape
+    h = cfg.n_heads
+    x = x.astype(cdt)
+    q = (x @ params["wq"].astype(cdt)).reshape(
+        b, s, h, m.nope_head_dim + m.rope_head_dim)
+    q = constrain(q, "batch", None, "heads", None)
+    q_nope, q_rope = jnp.split(q, [m.nope_head_dim], axis=-1)
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    c_kv = rmsnorm(params["kv_norm"], x @ params["w_dkv"].astype(cdt),
+                   cfg.norm_eps)                                   # (B,S,r)
+    k_rope = apply_rope((x @ params["w_krope"].astype(cdt))[:, :, None, :],
+                        positions, cfg.rope_theta)                 # (B,S,1,dr)
+
+    if cache is not None:
+        # ---- absorbed decode (DeepSeek's production form) ----
+        # Scores are computed directly against the latent cache:
+        #   q·K^T = (q_nope W_uk^T)·c^T  and  out = (P·c) W_uv.
+        # Up-projecting the whole 32k cache per token costs
+        # O(S·r·h·(n+v)) FLOPs + a full-cache reshard per layer (the
+        # dry-run measured 2.18 s/token of collectives on decode_32k);
+        # the absorbed form touches the latent once — O(S·r·h).
+        c_cache, kr_cache = cache
+        z = jnp.int32(0)
+        pos = jnp.asarray(cache_pos, jnp.int32)
+        c_cache = jax.lax.dynamic_update_slice(
+            c_cache, c_kv.astype(c_cache.dtype), (z, pos, z))
+        kr_cache = jax.lax.dynamic_update_slice(
+            kr_cache, k_rope[:, :, 0, :].astype(kr_cache.dtype),
+            (z, pos, z))
+        c_all = constrain(c_cache.astype(cdt), "batch", "kv_seq", None)
+        kr_all = constrain(kr_cache.astype(cdt), "batch", "kv_seq", None)
+        s_k = c_all.shape[1]
+        f32 = jnp.float32
+        r = m.kv_lora_rank
+        w_uk_h = params["w_uk"].astype(cdt).reshape(r, h, m.nope_head_dim)
+        q_lat = jnp.einsum("bqhn,rhn->bqhr", q_nope, w_uk_h)   # (B,1,h,r)
+        s_nope = jnp.einsum("bqhr,bkr->bhqk", q_lat, c_all,
+                            preferred_element_type=f32)
+        s_rope = jnp.einsum("bqhd,bkd->bhqk", q_rope, kr_all,
+                            preferred_element_type=f32)
+        scale = 1.0 / jnp.sqrt(f32(m.nope_head_dim + m.rope_head_dim))
+        scores = (s_nope + s_rope) * scale
+        k_idx = jnp.arange(s_k, dtype=jnp.int32)
+        ok = k_idx <= pos
+        ok &= (window < 0) | (pos - k_idx < jnp.maximum(window, 1))
+        scores = jnp.where(ok[None, None, None, :], scores, NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1)
+        out_lat = jnp.einsum("bhqk,bkr->bqhr", probs.astype(cdt), c_all,
+                             preferred_element_type=f32)      # (B,1,h,r)
+        w_uv_h = params["w_uv"].astype(cdt).reshape(r, h, m.v_head_dim)
+        out = jnp.einsum("bqhr,rhv->bqhv", out_lat.astype(cdt), w_uv_h)
+        out = out.reshape(b, s, h * m.v_head_dim).astype(cdt)
+        out = constrain(out @ params["wo"].astype(cdt), "batch", None, None)
+        return out, (c_cache, kr_cache)
+
+    c_all, kr_all = c_kv, k_rope
+    s_k = s
+    k_pos = positions
+    new_cache = (c_kv, k_rope[:, :, 0, :])
+
+    k_nope = constrain((c_all @ params["w_uk"].astype(cdt)).reshape(
+        b, s_k, h, m.nope_head_dim), "batch", None, "heads", None)
+    val = constrain((c_all @ params["w_uv"].astype(cdt)).reshape(
+        b, s_k, h, m.v_head_dim), "batch", None, "heads", None)
+    k_full = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(kr_all, (b, s_k, h, m.rope_head_dim))],
+        axis=-1)
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+    out = _sdpa_masked(q_full, k_full, val, positions, k_pos, window,
+                       causal=True)
+    out = out.reshape(b, s, h * m.v_head_dim).astype(cdt)
+    out = constrain(out @ params["wo"].astype(cdt), "batch", None, None)
+    return out, new_cache
+
+
+def cross_attn_params(key, cfg: ModelConfig):
+    d, h, hd = cfg.d_model, cfg.n_heads, cfg.head_dim_
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(ks[0], (d, h * hd), dtype=cfg.pdtype),
+        "wk": dense_init(ks[1], (d, h * hd), dtype=cfg.pdtype),
+        "wv": dense_init(ks[2], (d, h * hd), dtype=cfg.pdtype),
+        "wo": dense_init(ks[3], (h * hd, d), fan_in=h * hd, dtype=cfg.pdtype),
+    }
+
+
+def cross_attention_apply(params, cfg: ModelConfig, x, enc_out,
+                          kv_cache: Optional[Tuple] = None):
+    """Decoder->encoder cross attention (whisper); enc_out: (B, Se, d).
+
+    Query-chunked like self-attention (_sdpa_masked): unchunked 16k x 16k
+    cross scores put whisper prefill_32k at 50 GiB/device in the dry-run.
+
+    ``kv_cache=(xk, xv)`` serves decode: cross K/V are computed once at
+    prefill and cached — recomputing them from the full encoder output
+    every token cost 2·Se·d² FLOPs per layer per token (the whisper
+    decode_32k cell's dominant term before this).  Returns
+    (out, (xk, xv))."""
+    cdt = cfg.cdtype
+    b, s, d = x.shape
+    h, hd = cfg.n_heads, cfg.head_dim_
+    x = x.astype(cdt)
+    q = (x @ params["wq"].astype(cdt)).reshape(b, s, h, hd)
+    q = constrain(q, "batch", None, "heads", None)
+    if kv_cache is not None:
+        k, v = kv_cache
+        k = k.astype(cdt)
+        v = v.astype(cdt)
+    else:
+        e = enc_out.astype(cdt)
+        se = enc_out.shape[1]
+        k = (e @ params["wk"].astype(cdt)).reshape(b, se, h, hd)
+        v = (e @ params["wv"].astype(cdt)).reshape(b, se, h, hd)
+    se = k.shape[1]
+    k = constrain(k, "batch", "kv_seq", "heads", None)
+    v = constrain(v, "batch", "kv_seq", "heads", None)
+    q_pos = jnp.zeros((b, s), dtype=jnp.int32)
+    k_pos = jnp.zeros((se,), dtype=jnp.int32)
+    out = _sdpa_masked(q, k, v, q_pos, k_pos, jnp.int32(-1), causal=False)
+    out = out.reshape(b, s, h * hd).astype(cdt)
+    out = constrain(out @ params["wo"].astype(cdt), "batch", None, None)
+    return out, (k, v)

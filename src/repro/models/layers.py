@@ -1,0 +1,124 @@
+"""Shared neural layers: norms, MLPs, embeddings, rotary position encodings."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import constrain
+
+
+def dense_init(key, shape, fan_in=None, dtype=jnp.float32):
+    fan_in = fan_in if fan_in is not None else shape[0]
+    scale = (1.0 / max(fan_in, 1)) ** 0.5
+    return (jax.random.normal(key, shape, dtype=jnp.float32) * scale).astype(dtype)
+
+
+def rmsnorm_params(d, dtype):
+    return {"scale": jnp.ones((d,), dtype=dtype)}
+
+
+def rmsnorm(params, x, eps: float = 1e-6):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps)
+    return (out * params["scale"].astype(jnp.float32)).astype(dt)
+
+
+def mlp_params(key, d_model, d_ff, dtype, act="silu"):
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {
+        "w_up": dense_init(k1, (d_model, d_ff), dtype=dtype),
+        "w_down": dense_init(k3, (d_ff, d_model), fan_in=d_ff, dtype=dtype),
+    }
+    if act in ("silu", "swiglu"):
+        p["w_gate"] = dense_init(k2, (d_model, d_ff), dtype=dtype)
+    return p
+
+
+def mlp(params, x, act="silu", cdtype=jnp.bfloat16):
+    x = x.astype(cdtype)
+    up = x @ params["w_up"].astype(cdtype)
+    if "w_gate" in params:
+        gate = jax.nn.silu(x @ params["w_gate"].astype(cdtype))
+        h = gate * up
+    else:
+        h = jax.nn.gelu(up)
+    h = constrain(h, "batch", None, "mlp")
+    return constrain(h @ params["w_down"].astype(cdtype),
+                     "batch", None, None)
+
+
+def embed_params(key, vocab, d_model, dtype):
+    return {"table": dense_init(key, (vocab, d_model), fan_in=1, dtype=dtype)}
+
+
+def embed(params, ids):
+    return constrain(params["table"][ids], "batch", None, None)
+
+
+def unembed(params, x, cdtype=jnp.bfloat16):
+    # 1/sqrt(d) keeps initial logits O(1) under tied N(0,1) embeddings
+    # (initial CE ~= log V instead of ~7x that; examples/train_lm.py relies
+    # on the first few hundred steps being in the learnable regime)
+    d = x.shape[-1]
+    logits = x.astype(cdtype) @ params["table"].astype(cdtype).T
+    return constrain(logits * (1.0 / d ** 0.5), "batch", None, "vocab")
+
+
+# ---------------------------------------------------------------------------
+# Rotary position encodings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               theta: float = 1e6) -> jnp.ndarray:
+    """x: (B, S, H, D); positions: (B, S) int32."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                       # (D/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B, S, D/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jnp.ndarray, positions3: jnp.ndarray,
+                sections: Tuple[int, int, int], theta: float = 1e6
+                ) -> jnp.ndarray:
+    """Multimodal RoPE (qwen2-vl): x (B, S, H, D); positions3 (3, B, S).
+
+    The D/2 frequency lanes are partitioned into (temporal, height, width)
+    sections; each section rotates by its own position grid.
+    """
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                       # (D/2,)
+    sec = jnp.concatenate([
+        jnp.full((s,), i, dtype=jnp.int32) for i, s in enumerate(sections)])
+    assert sec.shape[0] == d // 2, (sections, d)
+    # lane l rotates by positions3[sec[l]] (temporal / height / width grid)
+    pos = positions3.astype(jnp.float32)               # (3, B, S)
+    lane_pos = pos[sec, :, :]                          # (D/2, B, S)
+    ang = jnp.moveaxis(lane_pos, 0, -1) * freqs        # (B, S, D/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(seq: int, d_model: int) -> jnp.ndarray:
+    pos = jnp.arange(seq, dtype=jnp.float32)[:, None]
+    div = jnp.exp(jnp.arange(0, d_model, 2, dtype=jnp.float32)
+                  * (-jnp.log(10000.0) / d_model))
+    pe = jnp.zeros((seq, d_model), dtype=jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(pos * div))
+    pe = pe.at[:, 1::2].set(jnp.cos(pos * div))
+    return pe

@@ -1,0 +1,226 @@
+"""Mixture-of-Experts FFN: top-k routing + capacity-grouped expert GEMMs.
+
+Dispatch is sort-based (MaxText/megablocks style): tokens are ranked within
+their routed expert, dropped beyond capacity C = ceil(T*k/E * cap_factor),
+gathered into a dense (E, C, d) buffer, run through batched expert GEMMs
+('ecd,edf->ecf'), and combined back weighted by router probabilities.  Total
+GEMM FLOPs = E*C*3*d*f ≈ active-expert FLOPs — honest for the roofline,
+unlike dense all-expert dispatch.  Under EP the expert axis shards over
+``model``; XLA inserts the all-to-all-equivalent collectives from the
+sharding of the (E, C, d) buffer.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.dist.sharding import bound_axis, bound_mesh, constrain
+
+from .config import ModelConfig
+from .layers import dense_init
+
+
+def moe_params(key, cfg: ModelConfig):
+    m = cfg.moe
+    d = cfg.d_model
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": dense_init(ks[0], (d, m.n_experts), dtype=jnp.float32),
+        "w_gate": dense_init(ks[1], (m.n_experts, d, m.d_expert),
+                             fan_in=d, dtype=cfg.pdtype),
+        "w_up": dense_init(ks[2], (m.n_experts, d, m.d_expert),
+                           fan_in=d, dtype=cfg.pdtype),
+        "w_down": dense_init(ks[3], (m.n_experts, m.d_expert, d),
+                             fan_in=m.d_expert, dtype=cfg.pdtype),
+    }
+    if m.n_shared:
+        p["shared_gate"] = dense_init(ks[4], (d, m.n_shared * m.d_expert),
+                                      dtype=cfg.pdtype)
+        k5, k6 = jax.random.split(ks[4])
+        p["shared_up"] = dense_init(k5, (d, m.n_shared * m.d_expert),
+                                    dtype=cfg.pdtype)
+        p["shared_down"] = dense_init(k6, (m.n_shared * m.d_expert, d),
+                                      fan_in=m.n_shared * m.d_expert,
+                                      dtype=cfg.pdtype)
+    return p
+
+
+def _moe_a2a(xf, top_e, top_p, params, cfg: ModelConfig, mesh, dp_axes):
+    """Explicit expert-parallel dispatch under shard_map (§Perf cell B
+    iteration 4).
+
+    GSPMD's scatter/gather partitioning moved dispatch payloads via
+    replicate+all-reduce / all-gather (2.2 TB/step/device on deepseek
+    train_4k).  Here each device routes its own token shard: local
+    capacity-grouping -> ``lax.all_to_all`` over the ``model`` (expert)
+    axis -> local expert GEMMs -> all_to_all back -> local combine.  Every
+    token's hidden vector crosses the expert axis exactly once each way —
+    the textbook MoE dispatch (DeepSpeed/MaxText).  Expert weights enter
+    replicated-over-data (the shard_map boundary performs the ZeRO
+    all-gather of the FSDP shards).
+    """
+    m = cfg.moe
+    t, d = xf.shape
+    tp = mesh.shape["model"]
+    e_loc = m.n_experts // tp
+    dp = int(np.prod([mesh.shape[a] for a in dp_axes])) if dp_axes else 1
+    # tokens shard over dp (+ model when they divide it — decode batches
+    # often don't); either way the a2a runs over the expert (model) axis
+    if t % (dp * tp) == 0:
+        tok_axes = tuple(dp_axes) + ("model",)
+        t_loc = t // (dp * tp)
+    else:
+        tok_axes = tuple(dp_axes)
+        t_loc = t // dp
+    c_src = int(max(4, np.ceil(t_loc * m.top_k * m.capacity_factor
+                               / m.n_experts)))
+    n_slots = m.n_experts * c_src
+
+    def local_fn(xf_l, te_l, tp_l, wg, wu, wd):
+        T = xf_l.shape[0]
+        k = te_l.shape[1]
+        flat_e = te_l.reshape(-1)
+        flat_p = tp_l.reshape(-1)
+        flat_tok = jnp.repeat(jnp.arange(T, dtype=jnp.int32), k)
+        order = jnp.argsort(flat_e, stable=True)
+        e_sorted = flat_e[order]
+        counts = jnp.zeros((m.n_experts,), jnp.int32).at[e_sorted].add(1)
+        starts = jnp.concatenate([
+            jnp.zeros(1, jnp.int32),
+            jnp.cumsum(counts)[:-1].astype(jnp.int32)])
+        rank_sorted = jnp.arange(T * k, dtype=jnp.int32) - starts[e_sorted]
+        rank = jnp.zeros_like(rank_sorted).at[order].set(rank_sorted)
+        keep = rank < c_src
+        slot = jnp.where(keep, flat_e * c_src + rank, n_slots)
+        slot_tok = jnp.full((n_slots + 1,), T, jnp.int32).at[slot].set(
+            flat_tok)
+        xf_pad = jnp.concatenate([xf_l, jnp.zeros((1, d), xf_l.dtype)])
+        sbuf = xf_pad[jnp.minimum(slot_tok[:-1], T)]
+        sbuf = sbuf.reshape(tp, e_loc, c_src, d)        # dest-major chunks
+        rbuf = jax.lax.all_to_all(sbuf, "model", split_axis=0,
+                                  concat_axis=0)        # (src, e_loc, c, d)
+        rb = jnp.moveaxis(rbuf, 0, 1).reshape(e_loc, tp * c_src, d)
+        gate = jax.nn.silu(jnp.einsum("ecd,edf->ecf", rb, wg))
+        up = jnp.einsum("ecd,edf->ecf", rb, wu)
+        oe = jnp.einsum("ecf,efd->ecd", gate * up, wd)
+        ob = jnp.moveaxis(oe.reshape(e_loc, tp, c_src, d), 1, 0)
+        back = jax.lax.all_to_all(ob, "model", split_axis=0, concat_axis=0)
+        out_flat = back.reshape(n_slots, d)             # expert-major slots
+        gathered = jnp.where(keep[:, None],
+                             out_flat[jnp.clip(slot, 0, n_slots - 1)], 0.0)
+        return (gathered.reshape(T, k, d)
+                * flat_p.reshape(T, k, 1).astype(xf_l.dtype)).sum(axis=1)
+
+    fn = jax.shard_map(
+        local_fn, mesh=mesh,
+        in_specs=(P(tok_axes, None), P(tok_axes, None), P(tok_axes, None),
+                  P("model", None, None), P("model", None, None),
+                  P("model", None, None)),
+        out_specs=P(tok_axes, None),
+        check_vma=False)
+    cdt = cfg.cdtype
+    return fn(xf, top_e, top_p, params["w_gate"].astype(cdt),
+              params["w_up"].astype(cdt), params["w_down"].astype(cdt))
+
+
+def moe_apply(params, cfg: ModelConfig, x):
+    """x: (B, S, d) -> (B, S, d), plus router aux loss (scalar)."""
+    m = cfg.moe
+    cdt = cfg.cdtype
+    b, s, d = x.shape
+    t = b * s
+    xf = x.reshape(t, d).astype(cdt)
+
+    logits = xf.astype(jnp.float32) @ params["router"]          # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, m.top_k)                # (T, k)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    # load-balancing aux loss (Switch-style)
+    me = probs.mean(axis=0)
+    ce = jnp.zeros((m.n_experts,), jnp.float32).at[top_e.reshape(-1)].add(
+        1.0 / (t * m.top_k))
+    aux = m.n_experts * jnp.sum(me * ce) * m.router_aux_weight
+
+    # explicit all-to-all dispatch when a production mesh is bound and the
+    # token/expert counts divide it; else the GSPMD scatter/gather path
+    mesh = bound_mesh()
+    if mesh is not None and bound_axis("expert") == "model":
+        batch_axes = bound_axis("batch") or ()
+        dp_axes = (batch_axes,) if isinstance(batch_axes, str) \
+            else tuple(batch_axes)
+        dp = int(np.prod([mesh.shape[a] for a in dp_axes])) if dp_axes \
+            else 1
+        if dp > 1 and t % dp == 0:
+            combined = _moe_a2a(xf, top_e, top_p, params, cfg, mesh,
+                                dp_axes)
+            if m.n_shared:
+                g = jax.nn.silu(xf @ params["shared_gate"].astype(cdt))
+                u = xf @ params["shared_up"].astype(cdt)
+                combined = combined + (g * u) @ params["shared_down"] \
+                    .astype(cdt)
+            return combined.reshape(b, s, d), aux
+
+    capacity = int(max(1, (t * m.top_k * m.capacity_factor) // m.n_experts))
+    flat_e = top_e.reshape(-1)                                  # (T*k,)
+    flat_p = top_p.reshape(-1)
+    flat_tok = jnp.repeat(jnp.arange(t), m.top_k)
+
+    # rank within expert via sorted segments
+    order = jnp.argsort(flat_e, stable=True)
+    e_sorted = flat_e[order]
+    seg_start = jnp.zeros((m.n_experts,), jnp.int32).at[e_sorted].add(1)
+    starts = jnp.concatenate([jnp.zeros(1, jnp.int32),
+                              jnp.cumsum(seg_start)[:-1].astype(jnp.int32)])
+    rank_sorted = jnp.arange(t * m.top_k, dtype=jnp.int32) - starts[e_sorted]
+    rank = jnp.zeros_like(rank_sorted).at[order].set(rank_sorted)
+
+    keep = rank < capacity
+    n_slots = m.n_experts * capacity
+    slot = jnp.where(keep, flat_e * capacity + rank, n_slots)
+    # dispatch = int32 scatter + payload gather.  Scattering the (T·k, d)
+    # payloads directly made GSPMD replicate-and-all-reduce whole (E, C, d)
+    # buffers (0.64 TB/step/device on deepseek train_4k); scattering 4-byte
+    # token ids and gathering the payload moves 1000x less through the
+    # scatter path (§Perf cell B iteration 3).
+    slot_tok = jnp.full((n_slots + 1,), t, jnp.int32).at[slot].set(
+        flat_tok.astype(jnp.int32))
+    xf_pad = jnp.concatenate([xf, jnp.zeros((1, d), cdt)])
+    buf = xf_pad[jnp.minimum(slot_tok[:-1], t)]           # (E*C, d) gather
+    # expert-sharded dispatch buffer (EP): without the constraint the SPMD
+    # partitioner ran every expert GEMM with a sharded *contraction* and
+    # all-reduced whole (E, C, d) buffers per layer — 2.3 TB/step/device on
+    # deepseek train_4k (EXPERIMENTS.md §Perf cell B)
+    buf = constrain(buf.reshape(m.n_experts, capacity, d),
+                    "expert", "capacity", None)
+
+    # ZeRO-style: all-gather the FSDP-sharded expert weights at use (a few
+    # 10s of MB) instead of letting the partitioner run the GEMMs with a
+    # sharded contraction and all-reduce (E, C, •) activations (100s of MB
+    # x fwd/remat/bwd — §Perf cell B iteration 2)
+    w_gate = constrain(params["w_gate"].astype(cdt), "expert", None, None)
+    w_up = constrain(params["w_up"].astype(cdt), "expert", None, None)
+    w_down = constrain(params["w_down"].astype(cdt), "expert", None, None)
+    gate = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, w_gate))
+    up = jnp.einsum("ecd,edf->ecf", buf, w_up)
+    out_e = jnp.einsum("ecf,efd->ecd", gate * up, w_down)
+    out_e = constrain(out_e, "expert", "capacity", None)
+    out_flat = out_e.reshape(n_slots, d)
+    gathered = jnp.where(keep[:, None],
+                         out_flat[jnp.clip(slot, 0, n_slots - 1)],
+                         0.0)
+    # combine is a pure reshape+reduce: flat_tok = repeat(arange(t), k), so
+    # entry (t_i, j) of the (t, k, d) view IS token t_i's j-th expert output
+    # — the previous scatter-add here was another replicate+all-reduce
+    combined = (gathered.reshape(t, m.top_k, d)
+                * flat_p.reshape(t, m.top_k, 1).astype(cdt)).sum(axis=1)
+    combined = constrain(combined.astype(cdt), "tokens", None)
+
+    if m.n_shared:
+        g = jax.nn.silu(xf @ params["shared_gate"].astype(cdt))
+        u = xf @ params["shared_up"].astype(cdt)
+        combined = combined + (g * u) @ params["shared_down"].astype(cdt)
+
+    return combined.reshape(b, s, d), aux

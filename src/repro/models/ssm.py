@@ -1,0 +1,306 @@
+"""Recurrent blocks: xLSTM (mLSTM + sLSTM) and RG-LRU (RecurrentGemma).
+
+TPU-native forms:
+* **mLSTM** uses the *chunkwise-parallel* formulation: within a chunk the
+  matrix-memory recurrence is an intra-chunk decay-masked attention
+  (MXU einsums); across chunks a (nh, hd, hd) state is carried by
+  ``lax.scan``.  Log-sigmoid forget gates keep every decay factor <= 1, so
+  the chunkwise log-space algebra never overflows (input gate clipped).
+* **sLSTM** keeps the paper's scalar-memory recurrence with block-diagonal
+  per-head recurrent weights; sequential ``lax.scan`` over time (this block
+  appears 1-in-8, so the serial span is small).
+* **RG-LRU** is a per-channel gated linear recurrence — an
+  ``associative_scan`` (log-depth on TPU), with the Griffin block structure
+  (conv + gated branch) around it.
+
+All three expose (sequence-apply, single-step-decode) pairs; decode states
+are the serving caches — O(1) per token, which is why these families run the
+``long_500k`` cell (DESIGN.md §Arch-applicability).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import dense_init, rmsnorm, rmsnorm_params
+
+I_CLIP = 5.0
+
+
+def _causal_conv(x, w, state=None):
+    """Depthwise causal conv. x: (B, S, d); w: (cw, d).
+    state: (B, cw-1, d) trailing inputs for decode."""
+    cw = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], cw - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :]
+              for i in range(cw))
+    new_state = xp[:, -(cw - 1):, :] if cw > 1 else pad
+    return out, new_state
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def mlstm_params(key, cfg: ModelConfig):
+    d = cfg.d_model
+    xc = cfg.xlstm
+    di = int(d * xc.proj_factor)
+    nh = cfg.n_heads
+    ks = jax.random.split(key, 10)
+    return {
+        "norm": rmsnorm_params(d, cfg.pdtype),
+        "w_up": dense_init(ks[0], (d, 2 * di), dtype=cfg.pdtype),
+        "conv_w": dense_init(ks[1], (xc.conv_width, di), fan_in=xc.conv_width,
+                             dtype=cfg.pdtype),
+        "wq": dense_init(ks[2], (di, di), dtype=cfg.pdtype),
+        "wk": dense_init(ks[3], (di, di), dtype=cfg.pdtype),
+        "wv": dense_init(ks[4], (di, di), dtype=cfg.pdtype),
+        "w_i": dense_init(ks[5], (di, nh), dtype=jnp.float32),
+        "w_f": dense_init(ks[6], (di, nh), dtype=jnp.float32),
+        "b_f": jnp.full((nh,), 3.0, dtype=jnp.float32),   # open forget gates
+        "out_norm": rmsnorm_params(di, cfg.pdtype),
+        "w_down": dense_init(ks[7], (di, d), fan_in=di, dtype=cfg.pdtype),
+    }
+
+
+def _mlstm_chunk(q, k, v, log_i, log_f, state):
+    """One chunk. q,k,v: (B, L, nh, hd); log_i/log_f: (B, L, nh).
+    state: (C (B,nh,hd,hd), n (B,nh,hd)).  Returns (h, new_state)."""
+    b, L, nh, hd = q.shape
+    C_prev, n_prev = state
+    F = jnp.cumsum(log_f, axis=1)                     # (B, L, nh), <= 0
+    # intra-chunk decay matrix D[i,j] = exp(F_i - F_j + log_i_j), j <= i
+    Fi = F[:, :, None, :]
+    Fj = F[:, None, :, :]
+    logD = Fi - Fj + log_i[:, None, :, :]
+    mask = (jnp.arange(L)[:, None] >= jnp.arange(L)[None, :])[None, :, :, None]
+    D = jnp.where(mask, jnp.exp(jnp.minimum(logD, 30.0)), 0.0)  # (B,i,j,nh)
+    scores = jnp.einsum("bihd,bjhd->bijh", q, k) / jnp.sqrt(jnp.float32(hd))
+    sd = scores * D
+    h_intra = jnp.einsum("bijh,bjhd->bihd", sd, v)
+    n_intra = jnp.einsum("bijh,bjhd->bihd", sd, k)
+    # inter-chunk contribution
+    decay_q = jnp.exp(F)[..., None]                   # (B, L, nh, 1)
+    h_inter = jnp.einsum("bihd,bhde->bihe", q * decay_q, C_prev)
+    n_inter = jnp.einsum("bihd,bhd->bih", q * decay_q, n_prev)   # (B,L,nh)
+    den = jnp.abs(jnp.einsum("bihd,bihd->bih", q, n_intra)
+                  + n_inter)[..., None]
+    h = (h_intra + h_inter) / jnp.maximum(den, 1.0)
+    # state update
+    F_L = F[:, -1:, :]                                # (B, 1, nh)
+    decay_k = jnp.exp(jnp.minimum(F_L - F + log_i, 30.0))[..., None]
+    C_new = jnp.exp(F_L[:, 0, :, None, None]) * C_prev + jnp.einsum(
+        "bjhd,bjhe->bhde", k * decay_k, v)
+    n_new = jnp.exp(F_L[:, 0, :, None]) * n_prev + jnp.sum(k * decay_k, axis=1)
+    return h, (C_new, n_new)
+
+
+def mlstm_apply(params, cfg: ModelConfig, x, cache=None):
+    """Sequence (chunkwise) or decode-step (cache given) mLSTM block."""
+    cdt = cfg.cdtype
+    xc = cfg.xlstm
+    b, s, d = x.shape
+    di = int(d * xc.proj_factor)
+    nh = cfg.n_heads
+    hd = di // nh
+    res = x
+    xn = rmsnorm(params["norm"], x.astype(cdt), cfg.norm_eps)
+    up = xn @ params["w_up"].astype(cdt)
+    xm, z = jnp.split(up, 2, axis=-1)
+    conv_state = None if cache is None else cache[2]
+    xc_out, new_conv = _causal_conv(xm, params["conv_w"].astype(cdt),
+                                    conv_state)
+    xc_act = jax.nn.silu(xc_out)
+    q = (xc_act @ params["wq"].astype(cdt)).reshape(b, s, nh, hd)
+    k = (xc_act @ params["wk"].astype(cdt)).reshape(b, s, nh, hd)
+    v = (xm @ params["wv"].astype(cdt)).reshape(b, s, nh, hd)
+    xf = xm.astype(jnp.float32)
+    log_i = jnp.minimum(xf @ params["w_i"], I_CLIP)
+    log_f = jax.nn.log_sigmoid(xf @ params["w_f"] + params["b_f"])
+
+    q32, k32, v32 = (t.astype(jnp.float32) for t in (q, k, v))
+    if cache is None:
+        L = min(xc.chunk, s)
+        assert s % L == 0, (s, L)
+        nchunk = s // L
+        def body(state, inp):
+            qc, kc, vc, lic, lfc = inp
+            h, state = _mlstm_chunk(qc, kc, vc, lic, lfc, state)
+            return state, h
+        reshape = lambda t: jnp.moveaxis(
+            t.reshape(b, nchunk, L, *t.shape[2:]), 1, 0)
+        C0 = jnp.zeros((b, nh, hd, hd), jnp.float32)
+        n0 = jnp.zeros((b, nh, hd), jnp.float32)
+        state, hs = jax.lax.scan(
+            body, (C0, n0),
+            (reshape(q32), reshape(k32), reshape(v32),
+             reshape(log_i), reshape(log_f)))
+        h = jnp.moveaxis(hs, 0, 1).reshape(b, s, nh, hd)
+        new_cache = (*state, new_conv)
+    else:
+        C_prev, n_prev = cache[0], cache[1]
+        i_t = jnp.exp(log_i[:, 0])                     # (B, nh)
+        f_t = jnp.exp(log_f[:, 0])
+        kv = jnp.einsum("bhd,bhe->bhde", k32[:, 0], v32[:, 0])
+        C_new = f_t[..., None, None] * C_prev + i_t[..., None, None] * kv
+        n_new = f_t[..., None] * n_prev + i_t[..., None] * k32[:, 0]
+        num = jnp.einsum("bhd,bhde->bhe", q32[:, 0], C_new)
+        den = jnp.abs(jnp.einsum("bhd,bhd->bh", q32[:, 0], n_new))[..., None]
+        h = (num / jnp.maximum(den, 1.0))[:, None].reshape(b, s, nh, hd)
+        new_cache = (C_new, n_new, new_conv)
+
+    h = h.reshape(b, s, di).astype(cdt)
+    h = rmsnorm(params["out_norm"], h, cfg.norm_eps)
+    out = (h * jax.nn.silu(z)) @ params["w_down"].astype(cdt)
+    return res + out.astype(res.dtype), new_cache
+
+
+def mlstm_init_cache(cfg: ModelConfig, batch: int):
+    xc = cfg.xlstm
+    di = int(cfg.d_model * xc.proj_factor)
+    nh = cfg.n_heads
+    hd = di // nh
+    return (jnp.zeros((batch, nh, hd, hd), jnp.float32),
+            jnp.zeros((batch, nh, hd), jnp.float32),
+            jnp.zeros((batch, xc.conv_width - 1, di), cfg.cdtype))
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def slstm_params(key, cfg: ModelConfig):
+    d = cfg.d_model
+    nh = cfg.n_heads
+    hd = d // nh
+    ks = jax.random.split(key, 4)
+    return {
+        "norm": rmsnorm_params(d, cfg.pdtype),
+        "w": dense_init(ks[0], (d, 4 * d), dtype=cfg.pdtype),
+        "r": dense_init(ks[1], (nh, hd, 4 * hd), fan_in=hd, dtype=cfg.pdtype),
+        "b": jnp.zeros((4 * d,), dtype=jnp.float32),
+        "w_out": dense_init(ks[2], (d, d), dtype=cfg.pdtype),
+    }
+
+
+def _slstm_cell(params_r, gates_x, state, nh, hd):
+    """gates_x: (B, 4d) precomputed W x_t + b; state: (c, n, h) each (B,nh,hd)."""
+    c, n, h = state
+    rec = jnp.einsum("bhd,hdg->bhg", h, params_r)      # (B, nh, 4hd)
+    g = gates_x.reshape(-1, nh, 4 * hd) + rec
+    i_r, f_r, z_r, o_r = jnp.split(g, 4, axis=-1)
+    i = jnp.exp(jnp.minimum(i_r, I_CLIP))
+    f = jax.nn.sigmoid(f_r + 1.0)
+    z = jnp.tanh(z_r)
+    o = jax.nn.sigmoid(o_r)
+    c = f * c + i * z
+    n = f * n + i
+    h = o * (c / jnp.maximum(jnp.abs(n), 1.0))
+    return c, n, h
+
+
+def slstm_apply(params, cfg: ModelConfig, x, cache=None):
+    cdt = cfg.cdtype
+    b, s, d = x.shape
+    nh = cfg.n_heads
+    hd = d // nh
+    res = x
+    xn = rmsnorm(params["norm"], x.astype(cdt), cfg.norm_eps)
+    gates_x = (xn @ params["w"].astype(cdt)).astype(jnp.float32) + params["b"]
+    if cache is None:
+        state = tuple(jnp.zeros((b, nh, hd), jnp.float32) for _ in range(3))
+    else:
+        state = cache
+    r32 = params["r"].astype(jnp.float32)
+
+    if s == 1:
+        state = _slstm_cell(r32, gates_x[:, 0], state, nh, hd)
+        hs = state[2][:, None]
+    else:
+        def body(st, gx):
+            st = _slstm_cell(r32, gx, st, nh, hd)
+            return st, st[2]
+        state, hs = jax.lax.scan(body, state, jnp.moveaxis(gates_x, 0, 1))
+        hs = jnp.moveaxis(hs, 0, 1)
+    out = hs.reshape(b, s, d).astype(cdt) @ params["w_out"].astype(cdt)
+    return res + out.astype(res.dtype), state
+
+
+def slstm_init_cache(cfg: ModelConfig, batch: int):
+    nh = cfg.n_heads
+    hd = cfg.d_model // nh
+    return tuple(jnp.zeros((batch, nh, hd), jnp.float32) for _ in range(3))
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU (RecurrentGemma / Griffin)
+# ---------------------------------------------------------------------------
+
+def rglru_params(key, cfg: ModelConfig):
+    d = cfg.d_model
+    dr = cfg.rglru.d_rnn or d
+    ks = jax.random.split(key, 7)
+    return {
+        "norm": rmsnorm_params(d, cfg.pdtype),
+        "w_x": dense_init(ks[0], (d, dr), dtype=cfg.pdtype),
+        "w_gate": dense_init(ks[1], (d, dr), dtype=cfg.pdtype),
+        "conv_w": dense_init(ks[2], (cfg.rglru.conv_width, dr),
+                             fan_in=cfg.rglru.conv_width, dtype=cfg.pdtype),
+        "w_a": dense_init(ks[3], (dr, dr), dtype=jnp.float32),
+        "w_i": dense_init(ks[4], (dr, dr), dtype=jnp.float32),
+        "lam": jnp.full((dr,), 2.0, dtype=jnp.float32),  # sigmoid(2)≈0.88
+        "w_down": dense_init(ks[5], (dr, d), fan_in=dr, dtype=cfg.pdtype),
+    }
+
+
+def rglru_apply(params, cfg: ModelConfig, x, cache=None):
+    """Griffin recurrent block: conv + RG-LRU branch gated by GeLU branch."""
+    cdt = cfg.cdtype
+    b, s, d = x.shape
+    res = x
+    xn = rmsnorm(params["norm"], x.astype(cdt), cfg.norm_eps)
+    branch = xn @ params["w_x"].astype(cdt)
+    gate = jax.nn.gelu(xn @ params["w_gate"].astype(cdt))
+    conv_state = None if cache is None else cache[1]
+    u, new_conv = _causal_conv(branch, params["conv_w"].astype(cdt),
+                               conv_state)
+    uf = u.astype(jnp.float32)
+    c = 8.0
+    log_a_max = c * jax.nn.log_sigmoid(params["lam"])        # (dr,), < 0
+    r = jax.nn.sigmoid(uf @ params["w_a"])
+    i = jax.nn.sigmoid(uf @ params["w_i"])
+    log_a = r * log_a_max[None, None, :]
+    a = jnp.exp(log_a)
+    gated_x = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-8)) * (i * uf)
+
+    if cache is None:
+        def combine(c1, c2):
+            a1, b1 = c1
+            a2, b2 = c2
+            return a1 * a2, a2 * b1 + b2
+        a_sc, h = jax.lax.associative_scan(combine, (a, gated_x), axis=1)
+        h_last = h[:, -1]
+        new_cache = (h_last, new_conv)
+    else:
+        h_prev = cache[0]
+        h = a[:, 0] * h_prev + gated_x[:, 0]
+        h_last = h
+        h = h[:, None]
+        new_cache = (h_last, new_conv)
+
+    out = (h.astype(cdt) * gate) @ params["w_down"].astype(cdt)
+    return res + out.astype(res.dtype), new_cache
+
+
+def rglru_init_cache(cfg: ModelConfig, batch: int):
+    dr = cfg.rglru.d_rnn or cfg.d_model
+    return (jnp.zeros((batch, dr), jnp.float32),
+            jnp.zeros((batch, cfg.rglru.conv_width - 1, dr), cfg.cdtype))

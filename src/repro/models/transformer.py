@@ -1,0 +1,401 @@
+"""Model assembly: layer-group plans, scan-over-layers, forward/decode.
+
+Every architecture is a sequence of *groups*; a group is a superblock
+(ordered tuple of block kinds) scanned ``repeats`` times with stacked
+params — so HLO size stays O(superblock), not O(depth) (granite-34b's 88
+layers lower as one scan).  Same-shape heterogeneity (gemma3's 5:1
+local:global windows) rides through scan ``xs`` as a per-repeat window
+scalar; different-shape heterogeneity (xLSTM's 7 mLSTM + 1 sLSTM,
+RecurrentGemma's 2 RG-LRU + 1 local-attn) becomes multi-part superblocks.
+
+Three entry points (the dry-run lowers all three):
+* ``forward``      — tokens/embeddings -> logits (+ MoE aux), training path;
+* ``prefill``      — forward that also returns per-layer caches;
+* ``decode_step``  — one token against a fixed-capacity cache (serving).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import attention as attn
+from . import ssm
+from .config import ModelConfig
+from .layers import (dense_init, embed, embed_params, mlp, mlp_params,
+                     rmsnorm, rmsnorm_params, sinusoidal_positions, unembed)
+from .moe import moe_apply, moe_params
+
+
+@dataclasses.dataclass(frozen=True)
+class GroupSpec:
+    name: str
+    parts: Tuple[Tuple[str, int], ...]      # ((kind, count), ...)
+    repeats: int
+    windows: Optional[np.ndarray] = None    # (repeats, n_instances) int32
+    d_ff_override: int = 0
+
+    @property
+    def instances(self) -> List[Tuple[str, int]]:
+        out = []
+        for kind, count in self.parts:
+            for j in range(count):
+                out.append((kind, len(out)))
+        return out
+
+
+def build_plan(cfg: ModelConfig) -> List[GroupSpec]:
+    if cfg.xlstm is not None:
+        se = cfg.xlstm.slstm_every
+        reps = cfg.n_layers // se
+        return [GroupSpec("xlstm", (("mlstm", se - 1), ("slstm", 1)), reps)]
+    if cfg.rglru is not None:
+        pat = cfg.rglru.block_pattern
+        plen = len(pat)
+        reps = cfg.n_layers // plen
+        rem = cfg.n_layers - reps * plen
+        parts = tuple((k, 1) for k in pat)
+        win = np.full((reps, plen), -1, dtype=np.int32)
+        for i, k in enumerate(pat):
+            if k == "local_attn":
+                win[:, i] = cfg.rglru.attn_window
+        groups = [GroupSpec("griffin", parts, reps, windows=win)]
+        if rem:
+            groups.append(GroupSpec(
+                "griffin_rem", tuple((pat[i], 1) for i in range(rem)), 1,
+                windows=np.full((1, rem), -1, dtype=np.int32)))
+        return groups
+    if cfg.enc_dec:
+        return [GroupSpec("encoder", (("enc_attn_mlp", 1),), cfg.n_enc_layers),
+                GroupSpec("decoder", (("dec_attn_mlp", 1),), cfg.n_layers)]
+    mixer = "mla" if cfg.mla is not None else "attn"
+    ffn = "moe" if cfg.moe is not None else "mlp"
+    groups = []
+    start = 0
+    if cfg.moe is not None and cfg.moe.first_dense_layers:
+        groups.append(GroupSpec(
+            "dense_head", ((f"{mixer}_mlp", 1),), cfg.moe.first_dense_layers,
+            d_ff_override=cfg.moe.dense_d_ff))
+        start = cfg.moe.first_dense_layers
+    n = cfg.n_layers - start
+    win = np.array([[cfg.window_for_layer(start + i)] for i in range(n)],
+                   dtype=np.int32)
+    groups.append(GroupSpec("blocks", ((f"{mixer}_{ffn}", 1),), n,
+                            windows=win))
+    return groups
+
+
+# ---------------------------------------------------------------------------
+# per-kind param init / apply / cache init
+# ---------------------------------------------------------------------------
+
+def _block_params(key, kind: str, cfg: ModelConfig, d_ff_override: int = 0):
+    ks = jax.random.split(key, 4)
+    p: Dict[str, Any] = {}
+    if kind.startswith("attn") or kind.endswith("attn_mlp") or \
+            kind.startswith("mla") or kind == "local_attn":
+        p["ln1"] = rmsnorm_params(cfg.d_model, cfg.pdtype)
+        if kind.startswith("mla"):
+            p["attn"] = attn.mla_params(ks[0], cfg)
+        else:
+            p["attn"] = attn.attn_params(ks[0], cfg)
+        if kind == "dec_attn_mlp":
+            p["ln_cross"] = rmsnorm_params(cfg.d_model, cfg.pdtype)
+            p["cross"] = attn.cross_attn_params(ks[2], cfg)
+        if kind.endswith("_moe"):
+            p["ln2"] = rmsnorm_params(cfg.d_model, cfg.pdtype)
+            p["ffn"] = moe_params(ks[1], cfg)
+        elif kind == "local_attn" and cfg.d_ff == 0:
+            pass
+        else:
+            d_ff = d_ff_override or cfg.d_ff
+            p["ln2"] = rmsnorm_params(cfg.d_model, cfg.pdtype)
+            p["ffn"] = mlp_params(ks[1], cfg.d_model, d_ff, cfg.pdtype,
+                                  cfg.act)
+        return p
+    if kind == "mlstm":
+        return ssm.mlstm_params(key, cfg)
+    if kind == "slstm":
+        return ssm.slstm_params(key, cfg)
+    if kind == "rglru":
+        p = ssm.rglru_params(key, cfg)
+        if cfg.d_ff:
+            p["ln2"] = rmsnorm_params(cfg.d_model, cfg.pdtype)
+            p["ffn"] = mlp_params(ks[1], cfg.d_model, cfg.d_ff, cfg.pdtype,
+                                  cfg.act)
+        return p
+    raise ValueError(f"unknown block kind {kind}")
+
+
+def _block_cache(kind: str, cfg: ModelConfig, batch: int, s_max: int):
+    if kind in ("mlstm",):
+        return ssm.mlstm_init_cache(cfg, batch)
+    if kind == "slstm":
+        return ssm.slstm_init_cache(cfg, batch)
+    if kind == "rglru":
+        return ssm.rglru_init_cache(cfg, batch)
+    if kind.startswith("mla"):
+        m = cfg.mla
+        return (jnp.zeros((batch, s_max, m.kv_lora_rank), cfg.cdtype),
+                jnp.zeros((batch, s_max, m.rope_head_dim), cfg.cdtype))
+    kv = (jnp.zeros((batch, s_max, cfg.n_kv_heads, cfg.head_dim_),
+                    cfg.cdtype),
+          jnp.zeros((batch, s_max, cfg.n_kv_heads, cfg.head_dim_),
+                    cfg.cdtype))
+    if kind == "dec_attn_mlp":
+        # + cross-attention K/V, computed once at prefill (enc length ==
+        # the decode cache length in the whisper cells: S_enc = S_dec)
+        return kv + (jnp.zeros((batch, s_max, cfg.n_heads, cfg.head_dim_),
+                               cfg.cdtype),
+                     jnp.zeros((batch, s_max, cfg.n_heads, cfg.head_dim_),
+                               cfg.cdtype))
+    return kv
+
+
+def _apply_block(kind: str, params, cfg: ModelConfig, x, ctx,
+                 window, cache=None):
+    """Returns (x, new_cache, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    if kind in ("mlstm", "slstm", "rglru") or kind == "rglru":
+        if kind == "mlstm":
+            x, new_cache = ssm.mlstm_apply(params, cfg, x, cache)
+        elif kind == "slstm":
+            x, new_cache = ssm.slstm_apply(params, cfg, x, cache)
+        else:
+            x, new_cache = ssm.rglru_apply(params, cfg, x, cache)
+            if "ffn" in params:
+                h = rmsnorm(params["ln2"], x.astype(cfg.cdtype), cfg.norm_eps)
+                x = x + mlp(params["ffn"], h, cfg.act, cfg.cdtype
+                            ).astype(x.dtype)
+        return x, new_cache, aux
+
+    causal = kind != "enc_attn_mlp"
+    h = rmsnorm(params["ln1"], x.astype(cfg.cdtype), cfg.norm_eps)
+    self_cache = cache
+    cross_cache = None
+    if kind == "dec_attn_mlp" and cache is not None:
+        self_cache, cross_cache = cache[:2], cache[2:]
+    if kind.startswith("mla"):
+        a_out, new_cache = attn.mla_apply(
+            params["attn"], cfg, h, ctx["positions"], window,
+            cache=self_cache, cache_pos=ctx.get("cache_pos"))
+    else:
+        a_out, new_cache = attn.attention_apply(
+            params["attn"], cfg, h, ctx["positions"], window,
+            cache=self_cache, cache_pos=ctx.get("cache_pos"),
+            positions3=ctx.get("positions3"), causal=causal)
+    x = x + a_out.astype(x.dtype)
+    if kind == "dec_attn_mlp":
+        h = rmsnorm(params["ln_cross"], x.astype(cfg.cdtype), cfg.norm_eps)
+        c_out, cross_kv = attn.cross_attention_apply(
+            params["cross"], cfg, h, ctx["enc_out"], kv_cache=cross_cache)
+        x = x + c_out.astype(x.dtype)
+        new_cache = tuple(new_cache) + tuple(cross_kv)
+    if "ffn" in params:
+        h = rmsnorm(params["ln2"], x.astype(cfg.cdtype), cfg.norm_eps)
+        if kind.endswith("_moe"):
+            f_out, aux = moe_apply(params["ffn"], cfg, h)
+        else:
+            f_out = mlp(params["ffn"], h, cfg.act, cfg.cdtype)
+        x = x + f_out.astype(x.dtype)
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# model init / apply
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: ModelConfig, key) -> Dict[str, Any]:
+    plan = build_plan(cfg)
+    keys = jax.random.split(key, len(plan) + 3)
+    params: Dict[str, Any] = {
+        "embed": embed_params(keys[0], cfg.padded_vocab, cfg.d_model,
+                              cfg.pdtype),
+        "final_norm": rmsnorm_params(cfg.d_model, cfg.pdtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = {
+            "table": dense_init(keys[1], (cfg.padded_vocab, cfg.d_model),
+                                dtype=cfg.pdtype)}
+    if cfg.enc_dec:
+        params["enc_final_norm"] = rmsnorm_params(cfg.d_model, cfg.pdtype)
+    groups = []
+    for gi, g in enumerate(plan):
+        gkey = jax.random.fold_in(keys[2], gi)
+        inst_params = {}
+        for kind, idx in g.instances:
+            ikey = jax.random.fold_in(gkey, idx)
+            stacked = jax.vmap(
+                lambda k: _block_params(k, kind, cfg, g.d_ff_override)
+            )(jax.random.split(ikey, g.repeats))
+            inst_params[f"{kind}_{idx}"] = stacked
+        groups.append(inst_params)
+    params["groups"] = groups
+    return params
+
+
+def init_cache(cfg: ModelConfig, batch: int, s_max: int):
+    plan = build_plan(cfg)
+    caches = []
+    for g in plan:
+        if g.name == "encoder":
+            caches.append({})       # encoder has no decode cache
+            continue
+        inst = {}
+        for kind, idx in g.instances:
+            one = _block_cache(kind, cfg, batch, s_max)
+            inst[f"{kind}_{idx}"] = jax.tree.map(
+                lambda x: jnp.broadcast_to(
+                    x[None], (g.repeats,) + x.shape).copy(), one)
+        caches.append(inst)
+    return caches
+
+
+def _run_group(g: GroupSpec, gparams, cfg, x, ctx, caches=None):
+    """Scan the group's superblock over its repeats (+remat policy)."""
+    windows = g.windows if g.windows is not None else \
+        np.full((g.repeats, len(g.instances)), -1, dtype=np.int32)
+    win_xs = jnp.asarray(windows, jnp.int32)
+
+    def body_inner(x, aux, params_r, win_r, cache_r):
+        new_cache_r = {}
+        for kind, idx in g.instances:
+            key = f"{kind}_{idx}"
+            c = None if cache_r is None else cache_r[key]
+            x, nc, a = _apply_block(kind, params_r[key], cfg, x, ctx,
+                                    win_r[idx], c)
+            new_cache_r[key] = nc
+            aux = aux + a
+        return x, aux, new_cache_r
+
+    if cfg.remat == "full":
+        body_inner = jax.checkpoint(
+            body_inner, policy=jax.checkpoint_policies.nothing_saveable)
+    elif cfg.remat == "dots":
+        body_inner = jax.checkpoint(
+            body_inner,
+            policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+
+    def body(carry, xs):
+        x, aux = carry
+        params_r, win_r, cache_r = xs
+        x, aux, new_cache_r = body_inner(x, aux, params_r, win_r, cache_r)
+        return (x, aux), new_cache_r
+
+    aux0 = jnp.zeros((), jnp.float32)
+    xs = (gparams, win_xs, caches)
+    (x, aux), new_caches = jax.lax.scan(body, (x, aux0), xs)
+    return x, aux, new_caches
+
+
+def forward(params, cfg: ModelConfig, batch, return_caches: bool = False):
+    """Training/prefill forward.  batch keys: tokens | embeds, positions,
+    positions3 (mrope), enc_embeds (enc-dec/audio)."""
+    plan = build_plan(cfg)
+    if cfg.input_kind == "tokens":
+        x = embed(params["embed"], batch["tokens"]).astype(cfg.cdtype)
+    else:
+        x = batch["embeds"].astype(cfg.cdtype)
+    positions = batch.get("positions")
+    b, s = x.shape[:2]
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    positions3 = batch.get("positions3")
+    if cfg.rope_kind == "mrope" and positions3 is None:
+        positions3 = jnp.broadcast_to(positions[None], (3, b, s))
+    ctx = {"positions": positions, "positions3": positions3}
+
+    enc_out = None
+    if cfg.enc_dec:
+        e = batch["enc_embeds"].astype(cfg.cdtype)
+        e = e + sinusoidal_positions(e.shape[1], cfg.d_model
+                                     ).astype(cfg.cdtype)[None]
+        ectx = {"positions": jnp.broadcast_to(
+            jnp.arange(e.shape[1], dtype=jnp.int32), e.shape[:2])}
+        for gi, g in enumerate(plan):
+            if g.name != "encoder":
+                continue
+            e, _, _ = _run_group(g, params["groups"][gi], cfg, e, ectx)
+        enc_out = rmsnorm(params["enc_final_norm"], e, cfg.norm_eps)
+        ctx["enc_out"] = enc_out
+        x = x + sinusoidal_positions(x.shape[1], cfg.d_model
+                                     ).astype(cfg.cdtype)[None]
+
+    aux_total = jnp.zeros((), jnp.float32)
+    caches = []
+    for gi, g in enumerate(plan):
+        if g.name == "encoder":
+            caches.append({})
+            continue
+        x, aux, cache = _run_group(g, params["groups"][gi], cfg, x, ctx)
+        aux_total = aux_total + aux
+        caches.append(cache)
+
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    head = params.get("lm_head", params["embed"])
+    logits = unembed(head, x, cfg.cdtype).astype(jnp.float32)
+    if return_caches:
+        return logits, aux_total, {"layers": caches, "enc_out": enc_out}
+    return logits, aux_total
+
+
+def make_cache(cfg: ModelConfig, batch: int, s_max: int, enc_out=None):
+    return {"layers": init_cache(cfg, batch, s_max), "enc_out": enc_out}
+
+
+def _sinusoidal_at(pos, d_model: int):
+    """Sinusoidal position embedding at a traced position. -> (d_model,)"""
+    half = d_model // 2
+    div = jnp.exp(jnp.arange(half, dtype=jnp.float32)
+                  * (-jnp.log(10000.0) / d_model) * 2.0)
+    ang = jnp.asarray(pos, jnp.float32) * div
+    pe = jnp.zeros((d_model,), jnp.float32)
+    pe = pe.at[0::2].set(jnp.sin(ang))
+    pe = pe.at[1::2].set(jnp.cos(ang))
+    return pe
+
+
+def decode_step(params, cfg: ModelConfig, cache, batch):
+    """One-token serving step.  batch: tokens (B, 1) | embeds (B, 1, d),
+    cache_pos scalar int32, enc_out for enc-dec.  Returns (logits, cache)."""
+    plan = build_plan(cfg)
+    if cfg.input_kind == "tokens":
+        x = embed(params["embed"], batch["tokens"]).astype(cfg.cdtype)
+    else:
+        x = batch["embeds"].astype(cfg.cdtype)
+    pos = batch["cache_pos"]
+    b = x.shape[0]
+    positions = jnp.broadcast_to(
+        jnp.asarray(pos, jnp.int32)[None, None], (b, 1))
+    enc_out = batch.get("enc_out")
+    if enc_out is None:
+        enc_out = cache.get("enc_out")
+    positions3 = batch.get("positions3")
+    if cfg.rope_kind == "mrope" and positions3 is None:
+        positions3 = jnp.broadcast_to(positions[None], (3, b, 1))
+    ctx = {"positions": positions, "cache_pos": pos,
+           "positions3": positions3,
+           "enc_out": enc_out}
+    if cfg.enc_dec:
+        x = x + _sinusoidal_at(pos, cfg.d_model).astype(cfg.cdtype)[None, None]
+    aux = jnp.zeros((), jnp.float32)
+    new_layers = []
+    for gi, g in enumerate(plan):
+        if g.name == "encoder":
+            new_layers.append({})
+            continue
+        x, a, nc = _run_group(g, params["groups"][gi], cfg, x, ctx,
+                              caches=cache["layers"][gi])
+        new_layers.append(nc)
+        aux = aux + a
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    head = params.get("lm_head", params["embed"])
+    logits = unembed(head, x, cfg.cdtype).astype(jnp.float32)
+    return logits, {"layers": new_layers, "enc_out": cache.get("enc_out")}
+
+
+def count_params(params) -> int:
+    return int(sum(np.prod(l.shape) for l in jax.tree.leaves(params)))

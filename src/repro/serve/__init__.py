@@ -1,0 +1,3 @@
+from .steps import (extend_cache, make_decode_step, make_prefill_step,
+                    sample_greedy, sample_temperature)
+from .engine import ServeEngine, Request

@@ -1,0 +1,128 @@
+"""Batched serving engine: fixed-slot continuous batching over a shared
+fixed-capacity KV cache.
+
+``ServeEngine`` keeps ``max_batch`` request slots.  New requests are padded
+to ``prompt_len`` and prefilled as a batch; decode then advances *all* active
+slots one token per ``step()`` (one jitted ``decode_step`` call — the
+batched-requests serving story).  Finished slots (EOS or ``max_new``) are
+vacated and refilled from the queue; per-slot generated tokens stream back on
+completion.  Everything is deterministic given (seed, arrival order).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+from repro.models.transformer import init_params, make_cache
+
+from .steps import extend_cache, make_decode_step, make_prefill_step, \
+    sample_greedy
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray              # (S_prompt,) int32
+    max_new: int = 32
+    eos_id: int = -1                # -1 = never
+    generated: Optional[List[int]] = None
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params=None, max_batch: int = 8,
+                 prompt_len: int = 32, s_max: int = 128, seed: int = 0):
+        assert cfg.input_kind == "tokens", "engine serves token models"
+        self.cfg = cfg
+        self.max_batch = max_batch
+        self.prompt_len = prompt_len
+        self.s_max = s_max
+        key = jax.random.PRNGKey(seed)
+        self.params = params if params is not None else init_params(cfg, key)
+        self._prefill = jax.jit(make_prefill_step(cfg))
+        self._decode = jax.jit(make_decode_step(cfg))
+        self.queue: List[Request] = []
+        self.done: Dict[int, List[int]] = {}
+        self._slots: List[Optional[Request]] = [None] * max_batch
+        self._pos = np.zeros(max_batch, dtype=np.int32)      # next write pos
+        self._cache = None
+        self._last_tok = np.zeros((max_batch, 1), dtype=np.int32)
+
+    # ------------------------------------------------------------------
+    def submit(self, req: Request):
+        req.generated = []
+        self.queue.append(req)
+
+    def _admit(self):
+        """Fill slots from the queue; batch-prefill the newcomers.
+
+        Admission is *epoch* batching: slots refill only when the whole
+        batch has drained, because every slot shares one scalar
+        ``cache_pos`` (per-slot positions are the continuous-batching
+        extension, tracked in DESIGN.md future work)."""
+        if any(s is not None for s in self._slots):
+            return
+        new_idx = [i for i, s in enumerate(self._slots) if s is None]
+        if not new_idx or not self.queue:
+            return
+        admitted = []
+        for i in new_idx:
+            if not self.queue:
+                break
+            self._slots[i] = self.queue.pop(0)
+            admitted.append(i)
+
+        toks = np.zeros((self.max_batch, self.prompt_len), dtype=np.int32)
+        for i in admitted:
+            p = self._slots[i].prompt[-self.prompt_len:]
+            toks[i, -len(p):] = p                     # left-pad into the slot
+        logits, caches = self._prefill(self.params, {"tokens": jnp.asarray(toks)})
+        # the whole batch drained before admission, so the cache is replaced
+        self._cache = extend_cache(self.cfg, caches, self.prompt_len,
+                                   self.s_max)
+        nxt = np.asarray(sample_greedy(logits))
+        for i in admitted:
+            self._pos[i] = self.prefill_written = self.prompt_len
+            self._last_tok[i] = nxt[i]
+            self._slots[i].generated.append(int(nxt[i, 0]))
+
+    # ------------------------------------------------------------------
+    def step(self) -> int:
+        """Admit + advance every active slot one token.  Returns #active."""
+        self._admit()
+        active = [i for i, s in enumerate(self._slots) if s is not None]
+        if not active:
+            return 0
+        # all slots share cache_pos; slots are admitted at the same prompt
+        # length so positions stay aligned (fixed-slot batching)
+        pos = int(self._pos[active[0]])
+        logits, self._cache = self._decode(
+            self.params, self._cache,
+            {"tokens": jnp.asarray(self._last_tok),
+             "cache_pos": jnp.int32(pos)})
+        nxt = np.asarray(sample_greedy(logits))
+        for i in active:
+            req = self._slots[i]
+            tok = int(nxt[i, 0])
+            req.generated.append(tok)
+            self._last_tok[i] = nxt[i]
+            self._pos[i] += 1
+            hit_eos = tok == req.eos_id
+            full = len(req.generated) >= req.max_new or \
+                self._pos[i] + 1 >= self.s_max
+            if hit_eos or full:
+                self.done[req.uid] = req.generated
+                self._slots[i] = None
+        return sum(s is not None for s in self._slots)
+
+    def run(self, max_steps: int = 10_000) -> Dict[int, List[int]]:
+        steps = 0
+        while (self.queue or any(s is not None for s in self._slots)) \
+                and steps < max_steps:
+            self.step()
+            steps += 1
+        return self.done

@@ -1,0 +1,98 @@
+"""Serving steps: prefill, cache extension, one-token decode, sampling.
+
+``make_prefill_step`` / ``make_decode_step`` build the jittable functions the
+launcher shards (these are exactly what the ``prefill_*`` / ``decode_*`` /
+``long_*`` dry-run cells lower).  ``extend_cache`` turns a prefill cache
+(KV length = prompt length) into a fixed-capacity decode cache (KV length =
+``s_max``) — attention/MLA caches are seq-padded, recurrent states (mLSTM /
+sLSTM / RG-LRU / conv) pass through, because prefill already left them at the
+post-prompt state (O(1) decode state is why SSM/hybrid archs run long_500k).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.transformer import decode_step, forward
+
+
+def make_prefill_step(cfg: ModelConfig) -> Callable:
+    """prefill_step(params, batch) -> (logits, cache_dict).
+
+    batch: tokens (B, S) | embeds (B, S, d) (+ positions3 / enc_embeds)."""
+
+    def prefill_step(params, batch):
+        logits, _aux, caches = forward(params, cfg, batch, return_caches=True)
+        return logits, caches
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig) -> Callable:
+    """decode_fn(params, cache, batch) -> (logits, new_cache).
+
+    batch: tokens (B, 1) | embeds (B, 1, d), cache_pos scalar int32."""
+
+    def decode_fn(params, cache, batch):
+        return decode_step(params, cfg, cache, batch)
+
+    return decode_fn
+
+
+def _pad_seq_axis(x: jnp.ndarray, axis: int, s_max: int) -> jnp.ndarray:
+    pad = s_max - x.shape[axis]
+    if pad <= 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+_SEQ_CACHE_KINDS = ("attn", "mla", "local_attn", "dec", "enc")
+
+
+def extend_cache(cfg: ModelConfig, prefill_cache: Dict[str, Any],
+                 prompt_len: int, s_max: int) -> Dict[str, Any]:
+    """Pad every seq-bearing cache leaf from ``prompt_len`` to ``s_max``.
+
+    Only attention-family blocks carry a sequence axis; recurrent states
+    (mLSTM/sLSTM/RG-LRU) pass through untouched — they are matched by their
+    block-kind key, NOT by shape (a recurrent state dim that happens to
+    equal prompt_len must not be padded)."""
+
+    def fix(path, leaf):
+        keys = [getattr(k, "key", "") for k in path]
+        is_attn = any(str(k).startswith(_SEQ_CACHE_KINDS) for k in keys)
+        if not is_attn:
+            return leaf
+        # decoder cross-attention K/V (tuple slots 2/3 under a "dec" key)
+        # keep the encoder length — zero-padding keys would leak softmax
+        # mass; only the *self*-attention slots grow to decode capacity
+        is_dec = any(str(k).startswith("dec") for k in keys)
+        idx = next((getattr(k, "idx", None) for k in reversed(path)
+                    if hasattr(k, "idx")), None)
+        if is_dec and idx is not None and idx >= 2:
+            return leaf
+        # stacked attention leaves: (repeats, B, S, ...) — S is axis >= 2
+        for ax in range(2, leaf.ndim):
+            if leaf.shape[ax] == prompt_len and prompt_len != s_max:
+                return _pad_seq_axis(leaf, ax, s_max)
+        return leaf
+
+    layers = jax.tree_util.tree_map_with_path(fix, prefill_cache["layers"])
+    return {"layers": layers, "enc_out": prefill_cache.get("enc_out")}
+
+
+def sample_greedy(logits: jnp.ndarray) -> jnp.ndarray:
+    """(B, 1, V) -> (B, 1) int32."""
+    return jnp.argmax(logits[:, -1:, :], axis=-1).astype(jnp.int32)
+
+
+def sample_temperature(logits: jnp.ndarray, key, temperature: float = 1.0
+                       ) -> jnp.ndarray:
+    scaled = logits[:, -1, :] / jnp.maximum(temperature, 1e-6)
+    out = jax.random.categorical(key, scaled, axis=-1)
+    return out[:, None].astype(jnp.int32)

@@ -1,0 +1,85 @@
+"""Native AdamW + warmup-cosine schedule + global-norm clipping.
+
+Built in-repo (no optax) per the everything-from-substrate mandate.  The
+optimizer state tree mirrors the param tree, so the sharding rule engine
+shards first/second moments exactly like their parameters (ZeRO-style when
+params are FSDP-sharded).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    m: Any
+    v: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: Callable[[jnp.ndarray], jnp.ndarray]
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+    def init(self, params) -> AdamWState:
+        zeros = lambda p: jax.tree.map(
+            lambda x: jnp.zeros(x.shape, jnp.float32), p)
+        return AdamWState(step=jnp.zeros((), jnp.int32), m=zeros(params),
+                          v=zeros(params))
+
+    def update(self, grads, state: AdamWState, params):
+        if self.clip_norm > 0:
+            gnorm = global_norm(grads)
+            scale = jnp.minimum(1.0, self.clip_norm / (gnorm + 1e-9))
+            grads = jax.tree.map(lambda g: g * scale, grads)
+        else:
+            gnorm = global_norm(grads)
+        step = state.step + 1
+        b1c = 1.0 - self.b1 ** step.astype(jnp.float32)
+        b2c = 1.0 - self.b2 ** step.astype(jnp.float32)
+        lr = self.lr(step)
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32)
+            m = self.b1 * m + (1 - self.b1) * g
+            v = self.b2 * v + (1 - self.b2) * g * g
+            mh = m / b1c
+            vh = v / b2c
+            delta = mh / (jnp.sqrt(vh) + self.eps) \
+                + self.weight_decay * p.astype(jnp.float32)
+            return m, v, (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+
+        flat = jax.tree.map(upd, grads, state.m, state.v, params)
+        m = jax.tree.map(lambda t: t[0], flat,
+                         is_leaf=lambda t: isinstance(t, tuple))
+        v = jax.tree.map(lambda t: t[1], flat,
+                         is_leaf=lambda t: isinstance(t, tuple))
+        new_p = jax.tree.map(lambda t: t[2], flat,
+                             is_leaf=lambda t: isinstance(t, tuple))
+        return new_p, AdamWState(step=step, m=m, v=v), gnorm
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(
+        jnp.sum(jnp.square(l.astype(jnp.float32)))
+        for l in jax.tree.leaves(tree)))
+
+
+def warmup_cosine(peak_lr: float, warmup: int, total: int,
+                  floor: float = 0.1):
+    def lr(step):
+        step = step.astype(jnp.float32)
+        warm = peak_lr * step / max(warmup, 1)
+        frac = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = peak_lr * (floor + (1 - floor) * 0.5
+                         * (1 + jnp.cos(jnp.pi * frac)))
+        return jnp.where(step < warmup, warm, cos)
+    return lr

@@ -1,0 +1,129 @@
+"""Training step: loss, microbatch gradient accumulation, train state.
+
+``make_train_step`` builds the jit-able step used by the launcher and the
+dry-run: scan over ``n_micro`` microbatches (each remat'd per the model
+config), accumulate fp32 grads, clip, AdamW update.  Gradient accumulation +
+per-block remat is what fits the train_4k cells into 16 GB/chip (see
+EXPERIMENTS.md §Dry-run).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.transformer import forward
+from .optimizer import AdamW, AdamWState
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: AdamWState
+
+
+def lm_loss(logits: jnp.ndarray, labels: jnp.ndarray, vocab_size: int,
+            z_loss: float = 1e-4) -> jnp.ndarray:
+    """Cross-entropy over the unpadded vocab + z-loss regularizer."""
+    v_pad = logits.shape[-1]
+    if v_pad > vocab_size:
+        pad_mask = jnp.arange(v_pad) >= vocab_size
+        logits = jnp.where(pad_mask[None, None, :], -1e30, logits)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    loss = jnp.mean(logz - ll)
+    if z_loss:
+        loss = loss + z_loss * jnp.mean(jnp.square(logz))
+    return loss
+
+
+def _shift_batch(batch: Dict[str, jnp.ndarray], cfg: ModelConfig):
+    """inputs = tokens[:, :-1]; labels = tokens[:, 1:] (token models);
+    embedding-input models carry explicit labels."""
+    if cfg.input_kind == "tokens":
+        toks = batch["tokens"]
+        inp = dict(batch, tokens=toks[:, :-1])
+        if "positions" in batch:
+            inp["positions"] = batch["positions"][:, :-1]
+        return inp, toks[:, 1:]
+    return batch, batch["labels"]
+
+
+def make_loss_fn(cfg: ModelConfig):
+    def loss_fn(params, batch):
+        inp, labels = _shift_batch(batch, cfg)
+        logits, aux = forward(params, cfg, inp)
+        if cfg.input_kind != "tokens":
+            labels = labels[:, :logits.shape[1]]
+        loss = lm_loss(logits, labels, cfg.vocab_size, cfg.z_loss)
+        return loss + aux, (loss, aux)
+    return loss_fn
+
+
+def make_train_step(cfg: ModelConfig, opt: AdamW, n_micro: int = 1,
+                    micro_batch_axes=None):
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    batch leaves have leading dim = global_batch; they are split into
+    ``n_micro`` microbatches scanned sequentially with fp32 accumulation.
+
+    ``micro_batch_axes`` (mesh axis name/tuple, e.g. ``("pod", "data")``)
+    pins the *per-micro batch* dim after the reshape.  Without it the SPMD
+    partitioner may shard the scan (microbatch) axis instead — every device
+    then redundantly computes the full microbatch and data-parallelism is
+    silently lost (caught by the dry-run roofline: 16x FLOP inflation on the
+    16-way data mesh; see EXPERIMENTS.md §Perf iteration 0).
+    """
+    loss_fn = make_loss_fn(cfg)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+    from jax.sharding import PartitionSpec as P
+
+    def train_step(state: TrainState, batch):
+        def reshape_micro(x):
+            b = x.shape[0]
+            assert b % n_micro == 0, (b, n_micro)
+            return x.reshape((n_micro, b // n_micro) + x.shape[1:])
+
+        # positions3 has batch on axis 1
+        micro = {}
+        for k, v in batch.items():
+            if k == "positions3":
+                m = v.reshape(v.shape[0], n_micro, -1, v.shape[-1])
+                micro[k] = jnp.moveaxis(m, 1, 0)
+            else:
+                micro[k] = reshape_micro(v)
+        if micro_batch_axes is not None:
+            def pin(k, x):
+                b_ax = 2 if k == "positions3" else 1
+                spec = [None] * x.ndim
+                spec[b_ax] = micro_batch_axes
+                return jax.lax.with_sharding_constraint(x, P(*spec))
+            micro = {k: pin(k, v) for k, v in micro.items()}
+
+        def body(acc, mb):
+            g_acc, l_acc, a_acc = acc
+            (tot, (loss, aux)), grads = grad_fn(state.params, mb)
+            g_acc = jax.tree.map(
+                lambda a, g: a + g.astype(jnp.float32) / n_micro,
+                g_acc, grads)
+            return (g_acc, l_acc + loss / n_micro, a_acc + aux / n_micro), None
+
+        g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                          state.params)
+        (grads, loss, aux), _ = jax.lax.scan(
+            body, (g0, jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+            micro)
+        new_params, new_opt, gnorm = opt.update(grads, state.opt, state.params)
+        metrics = {"loss": loss, "aux_loss": aux, "grad_norm": gnorm,
+                   "lr": opt.lr(new_opt.step)}
+        return TrainState(params=new_params, opt=new_opt), metrics
+
+    return train_step
+
+
+def init_train_state(cfg: ModelConfig, opt: AdamW, key) -> TrainState:
+    from repro.models.transformer import init_params
+    params = init_params(cfg, key)
+    return TrainState(params=params, opt=opt.init(params))

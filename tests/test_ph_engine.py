@@ -1,0 +1,176 @@
+"""Oracle-vs-engine equivalence for the Dory PH engine.
+
+The textbook standard-reduction oracle (core/ref.py) defines ground truth;
+every engine path (explicit/implicit x sparse/NS x single/batch) must produce
+identical persistence diagrams.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import build_filtration, compute_ph, ref
+from repro.core.diagrams import assert_diagrams_equal, canonicalize
+from repro.core.h0 import compute_h0
+from repro.core.homology import h2_columns, make_h1_adapter, make_h2_adapter
+from repro.core.reduction import merge_cancel, parity_reduce, reduce_dimension
+from repro.core.serial_parallel import reduce_dimension_batched
+from repro.core import pairing
+
+
+def random_cloud(seed, n=None, d=3):
+    rng = np.random.default_rng(seed)
+    n = n or int(rng.integers(6, 18))
+    return rng.normal(size=(n, d))
+
+
+# ---------------------------------------------------------------------------
+# paired indexing
+# ---------------------------------------------------------------------------
+
+@given(kp=st.integers(0, 2**31 - 1), ks=st.integers(0, 2**31 - 1))
+def test_pack_roundtrip(kp, ks):
+    key = pairing.pack(kp, ks)
+    kp2, ks2 = pairing.unpack(key)
+    assert (int(kp2), int(ks2)) == (kp, ks)
+    assert key != pairing.EMPTY_KEY
+
+
+@given(st.lists(st.tuples(st.integers(0, 2**20), st.integers(0, 2**20)),
+                min_size=2, max_size=20))
+def test_pack_preserves_order(pairs):
+    """Packed int64 comparison == paper eq. (1) lexicographic order."""
+    keys = [int(pairing.pack(kp, ks)) for kp, ks in pairs]
+    assert sorted(range(len(pairs)), key=lambda i: keys[i]) == \
+        sorted(range(len(pairs)), key=lambda i: pairs[i])
+
+
+# ---------------------------------------------------------------------------
+# GF(2) column algebra
+# ---------------------------------------------------------------------------
+
+@given(st.data())
+def test_merge_cancel_is_symmetric_difference(data):
+    a = np.unique(np.array(
+        data.draw(st.lists(st.integers(0, 99), max_size=30)), dtype=np.int64))
+    b = np.unique(np.array(
+        data.draw(st.lists(st.integers(0, 99), max_size=30)), dtype=np.int64))
+    out = merge_cancel(a, b)
+    expect = np.array(sorted(set(a.tolist()) ^ set(b.tolist())), dtype=np.int64)
+    assert np.array_equal(out, expect)
+
+
+@given(st.lists(st.integers(0, 20), max_size=40))
+def test_parity_reduce(vals):
+    keys = np.array(vals, dtype=np.int64)
+    out = parity_reduce(keys)
+    expect = sorted(v for v in set(vals) if vals.count(v) % 2 == 1)
+    assert out.tolist() == expect
+
+
+# ---------------------------------------------------------------------------
+# full-pipeline equivalence vs the oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", ["explicit", "implicit"])
+@pytest.mark.parametrize("sparse", [True, False])
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_engine_matches_oracle(mode, sparse, seed):
+    pts = random_cloud(seed)
+    tau = np.inf if seed % 2 == 0 else 1.6
+    o = ref.standard_reduction_points(pts, tau_max=tau, maxdim=2)
+    r = compute_ph(points=pts, tau_max=tau, maxdim=2, mode=mode, sparse=sparse)
+    assert_diagrams_equal(r.diagrams, o, dims=[0, 1, 2])
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000), nd=st.integers(2, 4),
+       finite_tau=st.booleans())
+def test_engine_matches_oracle_hypothesis(seed, nd, finite_tau):
+    rng = np.random.default_rng(seed)
+    pts = rng.normal(size=(int(rng.integers(5, 14)), nd))
+    tau = float(rng.uniform(0.8, 2.5)) if finite_tau else np.inf
+    o = ref.standard_reduction_points(pts, tau_max=tau, maxdim=2)
+    r = compute_ph(points=pts, tau_max=tau, maxdim=2,
+                   mode="implicit", sparse=bool(seed % 2))
+    assert_diagrams_equal(r.diagrams, o, dims=[0, 1, 2])
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000), batch_size=st.sampled_from([2, 16, 64]))
+def test_batched_equals_single(seed, batch_size):
+    """Serial-parallel (§4.4) must equal the 1-thread engine exactly."""
+    rng = np.random.default_rng(seed)
+    pts = rng.normal(size=(int(rng.integers(8, 16)), 3))
+    filt = build_filtration(points=pts, tau_max=np.inf)
+    h0 = compute_h0(filt)
+    cleared = set(int(e) for e in h0.death_edges)
+    cols = np.arange(filt.n_e - 1, -1, -1, dtype=np.int64)
+    a1 = make_h1_adapter(filt, sparse=True)
+    single = reduce_dimension(a1, cols, mode="explicit", cleared=cleared)
+    batched = reduce_dimension_batched(a1, cols, mode="implicit",
+                                       cleared=cleared, batch_size=batch_size)
+    assert np.array_equal(canonicalize(single.diagram()),
+                          canonicalize(batched.diagram()))
+    assert set(single.pivot_lows.tolist()) == set(batched.pivot_lows.tolist())
+
+
+def test_h2_batched_full_pipeline():
+    pts = random_cloud(42, n=16)
+    o = ref.standard_reduction_points(pts, maxdim=2)
+    r = compute_ph(points=pts, maxdim=2, engine="batch", batch_size=8,
+                   mode="implicit")
+    assert_diagrams_equal(r.diagrams, o, dims=[0, 1, 2])
+
+
+def test_trivial_pairs_not_stored():
+    """Paper §4.3.5: trivial pairs cost no pivot storage."""
+    pts = random_cloud(7, n=16)
+    filt = build_filtration(points=pts)
+    h0 = compute_h0(filt)
+    a1 = make_h1_adapter(filt, sparse=False)
+    cols = np.arange(filt.n_e - 1, -1, -1, dtype=np.int64)
+    res = reduce_dimension(a1, cols, mode="explicit",
+                           cleared=set(int(e) for e in h0.death_edges))
+    assert res.stats["n_stored_columns"] < res.stats["n_pairs"]
+
+
+def test_implicit_stores_less_than_explicit():
+    """Paper §4.3.1: storing V^⊥ instead of R^⊥ saves memory."""
+    pts = random_cloud(11, n=24)
+    exp = compute_ph(points=pts, maxdim=2, mode="explicit")
+    imp = compute_ph(points=pts, maxdim=2, mode="implicit")
+    assert imp.stats["h2_stored_bytes"] <= exp.stats["h2_stored_bytes"]
+    assert_diagrams_equal(
+        {k: canonicalize(v) for k, v in exp.diagrams.items()},
+        {k: canonicalize(v) for k, v in imp.diagrams.items()}, dims=[1, 2])
+
+
+def test_clearing_skips_columns():
+    """H0 deaths are never reduced in H1*; H1* deaths never appear as H2*
+    columns (Alg. 3)."""
+    pts = random_cloud(3, n=14)
+    filt = build_filtration(points=pts)
+    h0 = compute_h0(filt)
+    a1 = make_h1_adapter(filt, sparse=False)
+    cols1 = np.arange(filt.n_e - 1, -1, -1, dtype=np.int64)
+    res1 = reduce_dimension(a1, cols1, mode="explicit",
+                            cleared=set(int(e) for e in h0.death_edges))
+    # columns processed = n_e - #cleared
+    assert res1.stats["n_pairs"] + res1.stats["n_essential"] == \
+        filt.n_e - len(h0.death_edges)
+    cols2 = h2_columns(filt, res1.pivot_lows, sparse=False)
+    assert not (set(cols2.tolist()) & set(res1.pivot_lows.tolist()))
+
+
+def test_base_memory_formula():
+    """Paper appendix E: base memory = (3n + 12 n_e) * 4 bytes."""
+    filt = build_filtration(points=random_cloud(0, n=20), tau_max=1.5)
+    assert filt.base_memory_bytes() == (3 * filt.n + 12 * filt.n_e) * 4
+
+
+def test_distance_matrix_input():
+    pts = random_cloud(9, n=12)
+    from repro.core.filtration import pairwise_distances
+    o = compute_ph(points=pts, maxdim=1)
+    r = compute_ph(dists=pairwise_distances(pts), maxdim=1)
+    assert_diagrams_equal(o.diagrams, r.diagrams, dims=[0, 1])

@@ -1,0 +1,74 @@
+"""Known-topology checks: the engine recovers textbook Betti structure."""
+import numpy as np
+import pytest
+
+from repro.core import compute_ph
+from repro.data.pointclouds import (circle_points, clifford_torus, o3_points,
+                                    sphere_points, two_circles)
+
+
+def top_persistence(pd, k=1):
+    pd = pd[np.isfinite(pd[:, 1])] if pd.size else pd
+    if pd.size == 0:
+        return np.zeros(k)
+    pers = np.sort(pd[:, 1] - pd[:, 0])
+    return pers[-k:]
+
+
+def test_circle_h1():
+    """Unit circle: one H1 class; for a fine regular sample the death is at
+    sqrt(3) (equilateral-triangle fill) — an exact, analytic check."""
+    r = compute_ph(points=circle_points(24), maxdim=1)
+    pd1 = r.diagrams[1]
+    pers = pd1[:, 1] - pd1[:, 0]
+    dominant = pd1[np.argmax(pers)]
+    assert np.isclose(dominant[1], np.sqrt(3), atol=1e-9)
+    # exactly one class at intermediate scale
+    assert r.betti_at(1.0)[1] == 1
+
+
+def test_two_circles_h1():
+    r = compute_ph(points=two_circles(n=20, separation=6.0), maxdim=1)
+    assert r.betti_at(1.0)[1] == 2
+    assert r.betti_at(1.0)[0] == 2      # two components at small scale
+
+
+def test_sphere_h2():
+    pts = sphere_points(42, seed=0)
+    r = compute_ph(points=pts, maxdim=2)
+    pd2 = r.diagrams[2]
+    assert pd2.shape[0] >= 1
+    # the dominant void should clearly outlive noise
+    pers = np.sort(pd2[:, 1] - pd2[:, 0])
+    assert pers[-1] > 3 * (pers[-2] if len(pers) > 1 else 0.01)
+
+
+def test_clifford_torus_h1():
+    """Clifford torus S1 x S1: two independent H1 generators."""
+    pts = clifford_torus(n=144, seed=1, grid=True)
+    r = compute_ph(points=pts, tau_max=0.8, maxdim=1)
+    # after the lattice squares fill (death ~0.518) only the two torus
+    # generators survive; they never die below tau_max.
+    assert r.betti_at(0.6)[1] == 2, r.diagrams[1]
+    pd1 = r.diagrams[1]
+    assert int(np.isinf(pd1[:, 1]).sum()) == 2
+
+
+def test_o3_generation_shape():
+    """o3 data set (paper Table 1): random orthogonal 3x3 matrices as points
+    in R^9 — verify orthogonality and PH pipeline runs with tau_max=1."""
+    pts = o3_points(64, seed=0)
+    assert pts.shape == (64, 9)
+    m = pts.reshape(-1, 3, 3)
+    eye = np.einsum("nij,nkj->nik", m, m)
+    assert np.allclose(eye, np.eye(3), atol=1e-8)
+    r = compute_ph(points=pts, tau_max=1.0, maxdim=1)
+    assert r.stats["n_e"] > 0
+
+
+@pytest.mark.parametrize("tau", [0.3, 0.7])
+def test_betti_curve_monotonicity_h0(tau):
+    """beta_0 decreases with scale (components only merge)."""
+    pts = circle_points(30, noise=0.05, seed=2)
+    r = compute_ph(points=pts, maxdim=0)
+    assert r.betti_at(tau)[0] >= r.betti_at(tau + 0.5)[0]
