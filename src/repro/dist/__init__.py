@@ -1,0 +1,21 @@
+"""Distributed execution layer: sharding rules + gradient compression.
+
+``dist.sharding`` is the single place the repo maps *logical* tensor axes
+(batch, heads, kv_seq, mlp, vocab, expert, ...) and *parameter roles*
+(column/row-parallel projections, MoE expert stacks, vocab tables) onto the
+physical mesh axes (``pod``, ``data``, ``model``).  ``dist.compression``
+implements the int8 error-feedback gradient exchange used on the slow
+cross-pod (DCN) axis.
+"""
+from .compression import compressed_psum_grads, dequantize_int8, ef_compress
+from .sharding import (activation_rules, batch_specs, bind_activation_rules,
+                       bound_axis, bound_mesh, bound_rules, cache_specs,
+                       constrain, shard_params, shardings_from_specs,
+                       spec_for_param, tree_path_str)
+
+__all__ = [
+    "activation_rules", "batch_specs", "bind_activation_rules", "bound_axis",
+    "bound_mesh", "bound_rules", "cache_specs", "compressed_psum_grads",
+    "constrain", "dequantize_int8", "ef_compress", "shard_params",
+    "shardings_from_specs", "spec_for_param", "tree_path_str",
+]

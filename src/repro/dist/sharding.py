@@ -1,0 +1,393 @@
+"""Parameter / activation sharding rule engine.
+
+Physical axes (by convention across the repo):
+
+* ``model`` — tensor parallelism (TP): attention heads, FFN hidden, vocab,
+  MoE experts;
+* ``data`` — data parallelism + FSDP parameter sharding;
+* ``pod``  — the cross-pod DCN data axis (gradients cross it compressed,
+  see ``dist.compression``).
+
+Two rule families live here:
+
+* **parameter rules** (``spec_for_param`` / ``shard_params``): role-based
+  column/row parallelism keyed on the leaf name and head alignment — a
+  projection whose head count does not divide the TP axis falls back to
+  row-parallelism on its d_model dim rather than sharding heads unevenly;
+  parameters that cannot be sharded at all are recorded in the caller's
+  ``rep`` list so the launcher can report them.
+* **activation rules** (``activation_rules`` / ``constrain``): logical-axis
+  -> mesh-axis mapping bound around a step function with
+  ``bind_activation_rules``.  Model code calls ``constrain(x, "batch", None,
+  "heads", None)`` with logical names only; unbound (no mesh) it is a no-op,
+  so every model imports cleanly and runs un-sharded on a laptop.
+
+Decode is different from train: the KV cache is sequence-sharded over
+``model`` (heads stay unsharded — one token's Q/K/V is tiny), and when the
+serving batch cannot cover the data axis the whole cache goes seq-parallel
+over (data, model) — the batch-size-aware fallback ``activation_rules``
+implements.
+"""
+from __future__ import annotations
+
+import contextvars
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = [
+    "activation_rules", "batch_specs", "bind_activation_rules", "bound_axis",
+    "bound_mesh", "bound_rules", "cache_specs", "constrain", "shard_params",
+    "shardings_from_specs", "spec_for_param", "tree_path_str",
+]
+
+
+# ---------------------------------------------------------------------------
+# tree paths
+# ---------------------------------------------------------------------------
+
+def tree_path_str(kp) -> str:
+    """'groups/0/attn/wq'-style path from a jax key path."""
+    parts = []
+    for k in kp:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        elif hasattr(k, "name"):
+            parts.append(str(k.name))
+        else:
+            parts.append(str(k).strip("[].'\""))
+    return "/".join(parts)
+
+
+# ---------------------------------------------------------------------------
+# mesh introspection (works on jax.sharding.Mesh and duck-typed test meshes)
+# ---------------------------------------------------------------------------
+
+def _axis_size(mesh, name: Optional[str]) -> int:
+    if not name:
+        return 1
+    try:
+        return int(mesh.shape[name])
+    except (KeyError, TypeError):
+        return 1
+
+
+def _mesh_axes(mesh) -> Tuple[Optional[str], Tuple[str, ...]]:
+    """(tp axis, data axes) present on the mesh."""
+    names = tuple(getattr(mesh, "axis_names", ()))
+    tp = "model" if "model" in names else None
+    data_axes = tuple(a for a in ("pod", "data") if a in names)
+    return tp, data_axes
+
+
+def _dp_size(mesh, data_axes: Tuple[str, ...]) -> int:
+    n = 1
+    for a in data_axes:
+        n *= _axis_size(mesh, a)
+    return n
+
+
+# ---------------------------------------------------------------------------
+# parameter sharding rules
+# ---------------------------------------------------------------------------
+
+_COLUMN_NAMES = ("w_up", "w_gate", "shared_up", "shared_gate", "w_uk", "w_uv")
+_ROW_NAMES = ("w_down", "shared_down")
+_EXPERT_NAMES = ("w_up", "w_gate", "w_down")
+
+
+def spec_for_param(path: str, shape: Tuple[int, ...], mesh,
+                   rep: List[str], heads: Optional[Dict[str, int]] = None,
+                   fsdp: bool = True) -> P:
+    """PartitionSpec for one parameter leaf.
+
+    ``path`` is the '/'-joined tree path; params under ``groups/`` carry a
+    leading stacked-repeats dim that always stays unsharded.  ``heads``
+    (``{"q": n_heads, "kv": n_kv_heads}``) drives head alignment: an aligned
+    projection is column-parallel (out dim over ``model``); a misaligned one
+    is row-parallel (d_model over ``model``) so no head is ever split.
+    ``fsdp=False`` (serving) keeps params replicated over the data axis.
+    Leaves with no shardable dim are appended to ``rep``.
+    """
+    tp, data_axes = _mesh_axes(mesh)
+    tp_n = _axis_size(mesh, tp)
+    dp = "data" if (fsdp and "data" in data_axes) else None
+    dp_n = _axis_size(mesh, dp)
+
+    name = path.split("/")[-1]
+    nd = len(shape)
+    lead = 1 if (path.startswith("groups") or "/groups/" in path) \
+        and nd >= 2 else 0
+    core = shape[lead:]
+    cn = len(core)
+    spec: List[Any] = [None] * nd
+
+    def fit(dim: int, ax: Optional[str], n: int) -> Optional[str]:
+        return ax if ax is not None and n > 1 and dim % n == 0 else None
+
+    def put(i: int, ax: Optional[str]) -> None:
+        spec[lead + i] = ax
+
+    q_aligned = bool(heads and heads.get("q") and tp
+                     and heads["q"] % tp_n == 0)
+    kv_aligned = bool(heads and heads.get("kv") and tp
+                      and heads["kv"] % tp_n == 0)
+
+    if cn == 2 and name in ("wq", "wk", "wv") and heads:
+        # in-projections: column-parallel when the head count divides the TP
+        # axis, else row-parallel on d_model (never split a head)
+        aligned = q_aligned if name == "wq" else kv_aligned
+        if aligned:
+            put(0, fit(core[0], dp, dp_n))
+            put(1, fit(core[1], tp, tp_n))
+        else:
+            put(0, fit(core[0], tp, tp_n))
+            put(1, fit(core[1], dp, dp_n))
+    elif cn == 2 and name == "wo" and heads:
+        # out-projection: row-parallel on the h*hd contraction when heads
+        # are aligned (pairs with the column-parallel wq)
+        if q_aligned:
+            put(0, fit(core[0], tp, tp_n))
+            put(1, fit(core[1], dp, dp_n))
+        else:
+            put(0, fit(core[0], dp, dp_n))
+            put(1, fit(core[1], tp, tp_n))
+    elif cn == 3 and name in _EXPERT_NAMES:
+        # stacked routed experts (E, a, b): expert dim over model (EP)
+        put(0, fit(core[0], tp, tp_n))
+        big = 1 if core[1] >= core[2] else 2
+        other = 3 - big
+        if fit(core[big], dp, dp_n):
+            put(big, dp)
+        elif fit(core[other], dp, dp_n):
+            put(other, dp)
+    elif cn == 2 and name in _COLUMN_NAMES:
+        put(0, fit(core[0], dp, dp_n))
+        put(1, fit(core[1], tp, tp_n))
+    elif cn == 2 and name in _ROW_NAMES:
+        put(0, fit(core[0], tp, tp_n))
+        put(1, fit(core[1], dp, dp_n))
+    elif cn == 2 and name == "table":
+        # embedding / lm_head: vocab over model (padded_vocab guarantees
+        # divisibility), d_model over data
+        put(0, fit(core[0], tp, tp_n))
+        put(1, fit(core[1], dp, dp_n))
+    elif cn == 2 and name == "router":
+        put(0, fit(core[0], dp, dp_n))      # router is tiny: FSDP only
+    elif cn >= 2:
+        # generic 2D+: biggest dim over model, next shardable over data
+        order = sorted(range(cn), key=lambda i: -core[i])
+        put(order[0], fit(core[order[0]], tp, tp_n))
+        for i in order[1:]:
+            if fit(core[i], dp, dp_n):
+                put(i, dp)
+                break
+    # cn <= 1 (norm scales, biases): replicated by design, not a fallback
+
+    if cn >= 2 and all(s is None for s in spec):
+        rep.append(path)
+    return P(*spec)
+
+
+def shard_params(params, mesh, fsdp: bool = True,
+                 heads: Optional[Dict[str, int]] = None):
+    """PartitionSpecs for every leaf of ``params``.
+
+    Returns ``(spec_tree, report)`` where report is JSON-serializable:
+    leaf/sharded counts and the replicated-fallback paths.
+    """
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    rep: List[str] = []
+    specs = []
+    n_sharded = 0
+    for kp, leaf in flat:
+        path = tree_path_str(kp)
+        s = spec_for_param(path, tuple(leaf.shape), mesh, rep, heads=heads,
+                           fsdp=fsdp)
+        specs.append(s)
+        if any(a is not None for a in s):
+            n_sharded += 1
+    report = {"n_leaves": len(flat), "n_sharded": n_sharded,
+              "replicated": rep, "fsdp": bool(fsdp)}
+    return jax.tree_util.tree_unflatten(treedef, specs), report
+
+
+def shardings_from_specs(specs, mesh):
+    """PartitionSpec tree -> NamedSharding tree on ``mesh``."""
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def batch_specs(shapes: Dict[str, Any], mesh) -> Dict[str, P]:
+    """Specs for host data inputs: batch dim over the data axes (when it
+    covers them); ``positions3`` carries batch on axis 1; scalars replicate."""
+    _, data_axes = _mesh_axes(mesh)
+    dp_n = _dp_size(mesh, data_axes)
+    dp = data_axes[0] if len(data_axes) == 1 else (data_axes or None)
+
+    def one(key: str, leaf) -> P:
+        shape = tuple(leaf.shape)
+        if not shape:
+            return P()
+        b_ax = 1 if key == "positions3" else 0
+        spec: List[Any] = [None] * len(shape)
+        if dp is not None and dp_n > 1 and shape[b_ax] % dp_n == 0:
+            spec[b_ax] = dp
+        return P(*spec)
+
+    return {k: one(k, v) for k, v in shapes.items()}
+
+
+def cache_specs(layers, mesh, seq_len: int, batch: int):
+    """Specs for the stacked decode cache: batch (axis 1) over data, the
+    seq-capacity axis over model (the decode kv_seq rule); recurrent states
+    (no seq axis) shard batch only.
+
+    Mirrors the ``activation_rules`` decode fallback: when ``batch`` cannot
+    cover the data axes the cache batch stays unsharded and its seq axis
+    goes fully seq-parallel over (data..., model), so the stored sharding
+    matches the in-step kv_seq constraint instead of forcing a per-step
+    reshard."""
+    tp, data_axes = _mesh_axes(mesh)
+    tp_n = _axis_size(mesh, tp)
+    dp_n = _dp_size(mesh, data_axes)
+    dp = data_axes[0] if len(data_axes) == 1 else (data_axes or None)
+
+    batch_ok = dp is not None and dp_n > 1 and batch and batch % dp_n == 0
+    seq_axes = ((data_axes if not batch_ok else ())
+                + ((tp,) if tp and tp_n > 1 else ()))
+    seq_n = 1
+    for a in seq_axes:
+        seq_n *= _axis_size(mesh, a)
+    if seq_axes and seq_len % seq_n != 0:       # uneven: TP-only, or nothing
+        seq_axes = (tp,) if tp and tp_n > 1 and seq_len % tp_n == 0 else ()
+    seq_entry = (seq_axes[0] if len(seq_axes) == 1 else seq_axes) or None
+
+    def one(leaf) -> P:
+        shape = tuple(leaf.shape)
+        spec: List[Any] = [None] * len(shape)
+        if len(shape) >= 2 and batch_ok and shape[1] == batch:
+            spec[1] = dp
+        for i in range(2, len(shape)):
+            if seq_entry is not None and shape[i] == seq_len:
+                spec[i] = seq_entry
+                break
+        return P(*spec)
+
+    return jax.tree.map(one, layers)
+
+
+# ---------------------------------------------------------------------------
+# activation rules
+# ---------------------------------------------------------------------------
+
+class Rules(dict):
+    """Logical-axis -> mesh-axis mapping plus the mesh it was built for."""
+
+    def __init__(self, *args, mesh=None, **kwargs):
+        super().__init__(*args, **kwargs)
+        self.mesh = mesh
+
+
+def activation_rules(cfg, mesh, decode: bool = False,
+                     batch: Optional[int] = None) -> Rules:
+    """Build the logical-axis map for ``cfg`` on ``mesh``.
+
+    Train: heads/kv_heads shard over ``model`` when aligned; activations
+    batch-shard over the data axes; no sequence sharding.  Decode: heads stay
+    unsharded and the KV cache seq-shards over ``model``; if ``batch`` cannot
+    cover the data axes the batch rule drops to None and the cache goes fully
+    seq-parallel over (data..., model).
+    """
+    tp, data_axes = _mesh_axes(mesh)
+    tp_n = _axis_size(mesh, tp)
+    dp_n = _dp_size(mesh, data_axes)
+
+    def tp_fit(n: Optional[int]) -> Optional[str]:
+        return tp if tp and tp_n > 1 and n and n % tp_n == 0 else None
+
+    batch_axes: Optional[Tuple[str, ...]] = data_axes or None
+    if batch is not None and dp_n > 1 and batch % dp_n != 0:
+        batch_axes = None               # batch-size-aware seq-parallel fall.
+
+    rules = Rules(mesh=mesh)
+    if decode:
+        rules["heads"] = None           # one-token Q is tiny; cache rules win
+        rules["kv_heads"] = None
+        seq_axes = (data_axes if batch_axes is None else ()) \
+            + ((tp,) if tp else ())
+        rules["kv_seq"] = tuple(a for a in seq_axes if a) or None
+    else:
+        rules["heads"] = tp_fit(getattr(cfg, "n_heads", None))
+        rules["kv_heads"] = tp_fit(getattr(cfg, "n_kv_heads", None))
+        rules["kv_seq"] = None
+    if batch_axes is None:
+        rules["batch"] = None
+    else:
+        rules["batch"] = batch_axes[0] if len(batch_axes) == 1 else batch_axes
+    rules["mlp"] = tp_fit(getattr(cfg, "d_ff", None))
+    rules["vocab"] = tp_fit(getattr(cfg, "padded_vocab", None))
+    moe = getattr(cfg, "moe", None)
+    rules["expert"] = tp_fit(moe.n_experts) if moe is not None else None
+    rules["capacity"] = None
+    rules["tokens"] = rules["batch"]
+    return rules
+
+
+_ACTIVE: contextvars.ContextVar[Optional[Rules]] = contextvars.ContextVar(
+    "repro_dist_activation_rules", default=None)
+
+
+def bind_activation_rules(fn, rules: Rules):
+    """Wrap ``fn`` so ``constrain``/``bound_*`` see ``rules`` while it runs
+    (including while jit traces it)."""
+
+    @functools.wraps(fn)
+    def bound(*args, **kwargs):
+        token = _ACTIVE.set(rules)
+        try:
+            return fn(*args, **kwargs)
+        finally:
+            _ACTIVE.reset(token)
+
+    return bound
+
+
+def bound_rules() -> Optional[Rules]:
+    return _ACTIVE.get()
+
+
+def bound_axis(name: str):
+    """Mesh axis (or axes tuple) the logical ``name`` maps to, if bound."""
+    rules = _ACTIVE.get()
+    return None if rules is None else rules.get(name)
+
+
+def bound_mesh() -> Optional[Mesh]:
+    """The bound mesh, only if it is a real jax Mesh (not a test double)."""
+    rules = _ACTIVE.get()
+    mesh = None if rules is None else getattr(rules, "mesh", None)
+    return mesh if isinstance(mesh, Mesh) else None
+
+
+def constrain(x, *axes):
+    """``with_sharding_constraint`` by logical axis names; no-op unbound.
+
+    ``axes`` has one entry per dim of ``x``: a logical name resolved through
+    the bound rules, or None for an unsharded dim.
+    """
+    rules = _ACTIVE.get()
+    if rules is None:
+        return x
+    mesh = getattr(rules, "mesh", None)
+    if not isinstance(mesh, Mesh):
+        return x
+    spec = [rules.get(a) if a is not None else None for a in axes]
+    if all(s is None for s in spec):
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*spec)))

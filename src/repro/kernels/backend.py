@@ -1,0 +1,34 @@
+"""Backend selection shared by the Pallas kernel wrappers.
+
+Mosaic (the Pallas TPU compiler) only exists on TPU; everywhere else the
+kernels run in interpret mode for correctness.  Kernel entry points take
+``interpret=None`` and resolve it here at trace time, so real hardware gets
+compiled kernels by default while tests can still force either mode
+explicitly.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def default_interpret() -> bool:
+    """Interpret everywhere except on a TPU backend."""
+    return jax.default_backend() != "tpu"
+
+
+def resolve_interpret(interpret: Optional[bool]) -> bool:
+    return default_interpret() if interpret is None else bool(interpret)
+
+
+def pad_to_multiple(x: jnp.ndarray, multiple: int, axis: int) -> jnp.ndarray:
+    """Zero-pad ``axis`` up to the next multiple (the shared pad-then-slice
+    policy of the kernel wrappers; callers slice the result back)."""
+    pad = (-x.shape[axis]) % multiple
+    if not pad:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)

@@ -16,16 +16,20 @@ recurrentgemma local-attention layers; ``window < 0`` means global.
 from __future__ import annotations
 
 import functools
+import math
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from .backend import pad_to_multiple, resolve_interpret
+
 NEG_INF = -1e30
 
 
 def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, block_k: int, seq_k: int,
-                  causal: bool, window: int, sm_scale: float):
+                  valid: int, causal: bool, window: int, sm_scale: float):
     q = q_ref[0].astype(jnp.float32) * sm_scale          # (bq, d)
     bq, d = q.shape
     q_idx = pl.program_id(1) * bq + jax.lax.broadcasted_iota(
@@ -44,6 +48,8 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, block_k: int, seq_k: int,
             mask &= k_idx <= q_idx
         if window > 0:
             mask &= (q_idx - k_idx) < window
+        if valid < seq_k:
+            mask &= k_idx < valid             # padded keys never attend
         s = jnp.where(mask, s, NEG_INF)
         m_cur = jnp.maximum(m_prev, s.max(axis=1))
         alpha = jnp.exp(m_prev - m_cur)
@@ -66,26 +72,34 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, block_k: int, seq_k: int,
 def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
                     causal: bool = True, window: int = -1,
                     block_q: int = 128, block_k: int = 128,
-                    interpret: bool = True) -> jnp.ndarray:
+                    interpret: Optional[bool] = None) -> jnp.ndarray:
     """q, k, v: (BH, S, d) with matching head counts (GQA pre-expanded).
 
-    S must divide by the block sizes (ops.attention pads).
+    Ragged S is zero-padded to the block multiples (padded keys are masked
+    out of every softmax, padded query rows sliced off).
+    ``interpret=None`` resolves per backend (compiled on TPU only).
     """
+    interpret = resolve_interpret(interpret)
     bh, s, d = q.shape
-    assert s % block_q == 0 and s % block_k == 0, (s, block_q, block_k)
+    mult = block_q * block_k // math.gcd(block_q, block_k)
+    q = pad_to_multiple(q, mult, axis=1)
+    k = pad_to_multiple(k, mult, axis=1)
+    v = pad_to_multiple(v, mult, axis=1)
+    sp = q.shape[1]
     sm_scale = 1.0 / (d ** 0.5)
     kernel = functools.partial(
-        _flash_kernel, block_k=block_k, seq_k=s, causal=causal,
+        _flash_kernel, block_k=block_k, seq_k=sp, valid=s, causal=causal,
         window=window, sm_scale=sm_scale)
-    return pl.pallas_call(
+    out = pl.pallas_call(
         kernel,
-        grid=(bh, s // block_q),
+        grid=(bh, sp // block_q),
         in_specs=[
             pl.BlockSpec((1, block_q, d), lambda b, i: (b, i, 0)),
-            pl.BlockSpec((1, s, d), lambda b, i: (b, 0, 0)),
-            pl.BlockSpec((1, s, d), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((1, sp, d), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((1, sp, d), lambda b, i: (b, 0, 0)),
         ],
         out_specs=pl.BlockSpec((1, block_q, d), lambda b, i: (b, i, 0)),
-        out_shape=jax.ShapeDtypeStruct((bh, s, d), q.dtype),
+        out_shape=jax.ShapeDtypeStruct((bh, sp, d), q.dtype),
         interpret=interpret,
     )(q, k, v)
+    return out[:, :s]

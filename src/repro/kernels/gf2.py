@@ -22,10 +22,13 @@ deep; wide row spaces are nearly free (vector XOR).
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from .backend import pad_to_multiple, resolve_interpret
 
 NO_LOW = 2**31 - 1  # python int: kernels must not capture traced constants
 
@@ -56,52 +59,66 @@ def _find_low_kernel(cols_ref, lows_ref):
 
 @functools.partial(jax.jit, static_argnames=("block_c", "interpret"))
 def gf2_find_low(cols: jnp.ndarray, block_c: int = 128,
-                 interpret: bool = True) -> jnp.ndarray:
-    """First-set-bit index per bit-packed column. cols: (C, W) uint32."""
+                 interpret: Optional[bool] = None) -> jnp.ndarray:
+    """First-set-bit index per bit-packed column. cols: (C, W) uint32.
+
+    Odd column counts are zero-padded to the block multiple and sliced back
+    (a padded all-zero column reads as NO_LOW and is dropped anyway).
+    ``interpret=None`` resolves per backend (compiled on TPU only).
+    """
+    interpret = resolve_interpret(interpret)
     c, w = cols.shape
-    assert c % block_c == 0, (c, block_c)
-    return pl.pallas_call(
+    cols = pad_to_multiple(cols, block_c, axis=0)
+    cp = cols.shape[0]
+    lows = pl.pallas_call(
         _find_low_kernel,
-        grid=(c // block_c,),
+        grid=(cp // block_c,),
         in_specs=[pl.BlockSpec((block_c, w), lambda i: (i, 0))],
         out_specs=pl.BlockSpec((block_c,), lambda i: (i,)),
-        out_shape=jax.ShapeDtypeStruct((c,), jnp.int32),
+        out_shape=jax.ShapeDtypeStruct((cp,), jnp.int32),
         interpret=interpret,
     )(cols)
+    return lows[:c]
 
 
 def _serial_reduce_kernel(in_ref, out_ref, lows_ref, reds_ref):
     """One block: in-order column reduction with collision XOR (paper serial
-    phase).  Copies the VMEM block then reduces in place."""
+    phase).  The block rides the loop carries as a value — refs are written
+    only at the top level, so the kernel lowers identically under Mosaic and
+    the interpreter (ref mutation inside ``while_loop`` has no interpret-mode
+    discharge rule)."""
     C = in_ref.shape[1]
-    out_ref[...] = in_ref[...]
-    lows_ref[...] = jnp.full((1, C), NO_LOW, dtype=jnp.int32)
+    lows0 = jnp.full((C,), NO_LOW, dtype=jnp.int32)
 
-    def reduce_one(c, n_red):
-        def cond(state):
-            low, _ = state
-            earlier = jax.lax.broadcasted_iota(jnp.int32, (C,), 0) < c
-            return jnp.any((lows_ref[0, :] == low) & earlier
+    def reduce_one(c, state):
+        block, lows, n_red = state
+        earlier = jax.lax.broadcasted_iota(jnp.int32, (C,), 0) < c
+
+        def cond(st):
+            _, low, _ = st
+            return jnp.any((lows == low) & earlier
                            & (low != jnp.int32(NO_LOW)))
 
-        def body(state):
-            low, n = state
-            earlier = jax.lax.broadcasted_iota(jnp.int32, (C,), 0) < c
-            hit = (lows_ref[0, :] == low) & earlier
-            j = jnp.argmax(hit)
-            out_ref[0, c, :] = out_ref[0, c, :] ^ out_ref[0, j, :]
-            return _find_low_word(out_ref[0, c, :]), n + 1
+        def body(st):
+            col, low, n = st
+            j = jnp.argmax((lows == low) & earlier)
+            col = col ^ block[j]
+            return col, _find_low_word(col), n + 1
 
-        low0 = _find_low_word(out_ref[0, c, :])
-        low, n_red = jax.lax.while_loop(cond, body, (low0, n_red))
-        lows_ref[0, c] = low
-        return n_red
+        col0 = block[c]
+        col, low, n_red = jax.lax.while_loop(
+            cond, body, (col0, _find_low_word(col0), n_red))
+        return block.at[c].set(col), lows.at[c].set(low), n_red
 
-    reds_ref[0] = jax.lax.fori_loop(0, C, reduce_one, jnp.int32(0))
+    block, lows, n_red = jax.lax.fori_loop(
+        0, C, reduce_one, (in_ref[0], lows0, jnp.int32(0)))
+    out_ref[0] = block
+    lows_ref[0] = lows
+    reds_ref[0] = n_red
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def gf2_serial_reduce(blocks: jnp.ndarray, interpret: bool = True):
+def gf2_serial_reduce(blocks: jnp.ndarray, interpret: Optional[bool] = None):
     """Intra-block serial reduction per grid step.
 
     blocks: (G, C, W) uint32 bit-packed columns, filtration order along C.
@@ -109,6 +126,7 @@ def gf2_serial_reduce(blocks: jnp.ndarray, interpret: bool = True):
     After the call every block's non-empty columns have pairwise-distinct
     lows — the invariant the paper's clearance step commits.
     """
+    interpret = resolve_interpret(interpret)
     g, c, w = blocks.shape
     return pl.pallas_call(
         _serial_reduce_kernel,

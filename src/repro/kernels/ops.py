@@ -15,6 +15,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import ref as kref
+from .backend import default_interpret  # noqa: F401  (re-export)
 from .flash_attention import flash_attention
 from .gf2 import gf2_find_low, gf2_serial_reduce
 from .pairwise_dist import pairwise_sq_dists
@@ -24,17 +25,10 @@ def default_use_pallas() -> bool:
     return jax.default_backend() == "tpu"
 
 
-def _pad_rows(x: np.ndarray, mult: int):
-    n = x.shape[0]
-    pad = (-n) % mult
-    if pad:
-        x = np.concatenate([x, np.zeros((pad,) + x.shape[1:], x.dtype)], 0)
-    return x, n
-
-
 def pairwise_distances(x, y=None, block: int = 256, use_pallas=None,
-                       interpret: bool = True) -> jnp.ndarray:
-    """Euclidean distances, padded + tiled through the Pallas kernel."""
+                       interpret=None) -> jnp.ndarray:
+    """Euclidean distances through the Pallas kernel (which pads ragged
+    row counts to the block multiples internally)."""
     use_pallas = default_use_pallas() if use_pallas is None else use_pallas
     self_dist = y is None
     y = x if y is None else y
@@ -43,26 +37,22 @@ def pairwise_distances(x, y=None, block: int = 256, use_pallas=None,
     if not use_pallas:
         d2 = kref.pairwise_sq_dists_ref(x, y)
     else:
-        xp, m = _pad_rows(np.asarray(x), block)
-        yp, n = _pad_rows(np.asarray(y), block)
-        d2 = pairwise_sq_dists(jnp.asarray(xp), jnp.asarray(yp), block_m=block,
-                               block_n=block, interpret=interpret)[:m, :n]
+        d2 = pairwise_sq_dists(x, y, block_m=block, block_n=block,
+                               interpret=interpret)
     if self_dist:
         # kill catastrophic-cancellation residue on the diagonal
         d2 = d2 * (1.0 - jnp.eye(d2.shape[0], dtype=d2.dtype))
     return jnp.sqrt(d2)
 
 
-def find_low(cols, use_pallas=None, interpret: bool = True) -> jnp.ndarray:
+def find_low(cols, use_pallas=None, interpret=None) -> jnp.ndarray:
     use_pallas = default_use_pallas() if use_pallas is None else use_pallas
     if not use_pallas:
         return jnp.asarray(kref.gf2_find_low_ref(np.asarray(cols)))
-    c = cols.shape[0]
-    block = int(np.gcd(c, 128)) or 1
-    return gf2_find_low(jnp.asarray(cols), block_c=block, interpret=interpret)
+    return gf2_find_low(jnp.asarray(cols), interpret=interpret)
 
 
-def serial_reduce_bits(blocks, use_pallas=None, interpret: bool = True):
+def serial_reduce_bits(blocks, use_pallas=None, interpret=None):
     use_pallas = default_use_pallas() if use_pallas is None else use_pallas
     if not use_pallas:
         b, l, r = kref.gf2_serial_reduce_ref(np.asarray(blocks))
@@ -71,14 +61,14 @@ def serial_reduce_bits(blocks, use_pallas=None, interpret: bool = True):
 
 
 def attention(q, k, v, causal: bool = True, window: int = -1,
-              use_pallas=None, interpret: bool = True,
+              use_pallas=None, interpret=None,
               block_q: int = 128, block_k: int = 128) -> jnp.ndarray:
     """(BH, S, d) attention; Pallas flash kernel or jnp reference."""
     use_pallas = default_use_pallas() if use_pallas is None else use_pallas
     if not use_pallas:
         return kref.attention_ref(q, k, v, causal=causal, window=window)
-    s = q.shape[1]
-    bq = min(block_q, s)
-    bk = min(block_k, s)
+    # blocks pass through unshrunk: the kernel pads ragged/short S itself,
+    # keeping Pallas blocks MXU-aligned on the compiled (TPU) path
     return flash_attention(q, k, v, causal=causal, window=window,
-                           block_q=bq, block_k=bk, interpret=interpret)
+                           block_q=block_q, block_k=block_k,
+                           interpret=interpret)

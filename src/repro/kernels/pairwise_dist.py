@@ -15,10 +15,13 @@ leaving room for double buffering; the 256x256 output tile is MXU-aligned
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from .backend import pad_to_multiple, resolve_interpret
 
 
 def _pairwise_kernel(x_ref, y_ref, o_ref):
@@ -34,16 +37,20 @@ def _pairwise_kernel(x_ref, y_ref, o_ref):
 @functools.partial(jax.jit, static_argnames=("block_m", "block_n", "interpret"))
 def pairwise_sq_dists(x: jnp.ndarray, y: jnp.ndarray,
                       block_m: int = 256, block_n: int = 256,
-                      interpret: bool = True) -> jnp.ndarray:
+                      interpret: Optional[bool] = None) -> jnp.ndarray:
     """Squared distances (M, N) between rows of x (M, d) and y (N, d).
 
-    M, N must be divisible by the block sizes (callers pad; see ops.py).
+    Ragged M/N are zero-padded to the block multiples and the result sliced
+    back, so any point count works.  ``interpret=None`` resolves per backend
+    (compiled on TPU only).
     """
+    interpret = resolve_interpret(interpret)
     m, d = x.shape
     n = y.shape[0]
-    assert m % block_m == 0 and n % block_n == 0, (m, n, block_m, block_n)
-    grid = (m // block_m, n // block_n)
-    return pl.pallas_call(
+    x = pad_to_multiple(x, block_m, axis=0)
+    y = pad_to_multiple(y, block_n, axis=0)
+    grid = (x.shape[0] // block_m, y.shape[0] // block_n)
+    out = pl.pallas_call(
         _pairwise_kernel,
         grid=grid,
         in_specs=[
@@ -51,6 +58,8 @@ def pairwise_sq_dists(x: jnp.ndarray, y: jnp.ndarray,
             pl.BlockSpec((block_n, d), lambda i, j: (j, 0)),
         ],
         out_specs=pl.BlockSpec((block_m, block_n), lambda i, j: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((x.shape[0], y.shape[0]),
+                                       jnp.float32),
         interpret=interpret,
     )(x, y)
+    return out[:m, :n]

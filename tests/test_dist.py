@@ -1,0 +1,191 @@
+"""Unit tests for the repro.dist subsystem beyond the system-level contract:
+EF-compression edge inputs, spec_for_param replication fallbacks, rule
+binding, and the no-mesh import/run regression."""
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+
+class FakeMesh:
+    axis_names = ("data", "model")
+    shape = {"data": 16, "model": 16}
+
+
+# ---------------------------------------------------------------------------
+# ef_compress edge inputs
+# ---------------------------------------------------------------------------
+
+def _roundtrip(x):
+    from repro.dist.compression import dequantize_int8, ef_compress
+    err = jnp.zeros_like(x)
+    q, scale, new_err = ef_compress(x, err)
+    assert q.dtype == jnp.int8
+    assert np.isfinite(float(scale)) and float(scale) > 0
+    assert np.isfinite(np.asarray(new_err)).all()
+    np.testing.assert_allclose(
+        np.asarray(dequantize_int8(q, scale) + new_err), np.asarray(x),
+        rtol=0, atol=1e-6)
+    return q, scale, new_err
+
+
+def test_ef_compress_zeros():
+    q, scale, new_err = _roundtrip(jnp.zeros((32,), jnp.float32))
+    assert not np.asarray(q).any()
+    assert not np.asarray(new_err).any()
+
+
+@pytest.mark.parametrize("c", [1.0, -3.5, 1e-6, 2e30])
+def test_ef_compress_constant(c):
+    q, scale, new_err = _roundtrip(jnp.full((16,), c, jnp.float32))
+    # a constant saturates the top quantization level exactly
+    np.testing.assert_array_equal(np.asarray(q),
+                                  np.full((16,), np.sign(c) * 127, np.int8))
+
+
+def test_ef_compress_denormal():
+    """Denormal inputs must not produce inf/nan: the scale underflow guard
+    degrades to q=0 with the whole signal carried in the feedback error."""
+    tiny = np.float32(1e-42)                       # denormal in f32
+    x = jnp.asarray(np.array([tiny, -tiny, 0.0], np.float32))
+    q, scale, new_err = _roundtrip(x)
+    deq = np.asarray(q, np.float32) * float(scale)
+    assert np.isfinite(deq).all()
+
+
+def test_ef_feedback_accumulates_unbiased():
+    """Over repeated steps of the same gradient, the running dequantized sum
+    plus the carried error equals the exact running sum."""
+    from repro.dist.compression import dequantize_int8, ef_compress
+    rng = np.random.default_rng(0)
+    g = jnp.asarray(rng.normal(size=(64,)).astype(np.float32))
+    err = jnp.zeros_like(g)
+    sent = jnp.zeros_like(g)
+    for step in range(5):
+        q, scale, err = ef_compress(g, err)
+        sent = sent + dequantize_int8(q, scale)
+        np.testing.assert_allclose(np.asarray(sent + err),
+                                   np.asarray(g * (step + 1)),
+                                   rtol=0, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# spec_for_param fallbacks
+# ---------------------------------------------------------------------------
+
+def test_spec_for_param_replication_fallback():
+    from repro.dist.sharding import spec_for_param
+    rep = []
+    # no dim divides either 16-way axis -> fully replicated, recorded
+    spec = spec_for_param("groups/0/odd/w", (4, 7, 9), FakeMesh(), rep)
+    assert spec == P(None, None, None)
+    assert rep == ["groups/0/odd/w"]
+    # 1-D norm scales replicate by design and are NOT recorded
+    spec = spec_for_param("groups/0/ln1/scale", (4, 64), FakeMesh(), rep)
+    assert spec == P(None, None)
+    assert rep == ["groups/0/odd/w"]
+
+
+def test_spec_for_param_misaligned_heads_and_dmodel():
+    """Both the head dim and d_model misaligned: the projection keeps its
+    data-axis shard but gets no TP."""
+    from repro.dist.sharding import spec_for_param
+    rep = []
+    spec = spec_for_param("groups/0/attn/wk", (2, 100, 48), FakeMesh(), rep,
+                          heads={"q": 16, "kv": 3})
+    assert spec == P(None, None, "data")        # 100 % 16 != 0, 48 % 16 = 0
+    assert rep == []
+
+
+def test_spec_for_param_serving_no_fsdp():
+    from repro.dist.sharding import spec_for_param
+    rep = []
+    spec = spec_for_param("groups/0/attn/wq", (28, 1024, 2048), FakeMesh(),
+                          rep, heads={"q": 16, "kv": 8}, fsdp=False)
+    assert spec == P(None, None, "model")       # TP only, data-replicated
+    assert rep == []
+
+
+def test_shard_params_report():
+    from repro.dist.sharding import shard_params
+    params = {"embed": {"table": jnp.zeros((512, 64))},
+              "final_norm": {"scale": jnp.zeros((64,))}}
+    class SmallMesh:
+        axis_names = ("data", "model")
+        shape = {"data": 4, "model": 2}
+    specs, report = shard_params(params, SmallMesh())
+    assert specs["embed"]["table"] == P("model", "data")
+    assert report["n_leaves"] == 2 and report["n_sharded"] == 1
+    assert report["replicated"] == []
+
+
+# ---------------------------------------------------------------------------
+# rule binding
+# ---------------------------------------------------------------------------
+
+def test_constrain_noop_without_rules():
+    from repro.dist.sharding import bound_axis, bound_mesh, constrain
+    x = jnp.ones((4, 8))
+    assert constrain(x, "batch", None) is x
+    assert bound_axis("batch") is None and bound_mesh() is None
+
+
+def test_bind_activation_rules_scopes_the_binding():
+    from repro.configs import get_config
+    from repro.dist.sharding import (activation_rules, bind_activation_rules,
+                                     bound_axis)
+    rules = activation_rules(get_config("qwen3_0_6b"), FakeMesh())
+
+    def probe(_):
+        return bound_axis("heads")
+
+    assert bind_activation_rules(probe, rules)(0) == "model"
+    assert bound_axis("heads") is None          # binding did not leak
+
+
+def test_constrain_applies_bound_mesh(tmp_path):
+    """With a real mesh bound, constrain emits a NamedSharding constraint."""
+    from repro.configs import get_config
+    from repro.dist.sharding import (activation_rules, bind_activation_rules,
+                                     constrain)
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((1,), ("model",))
+    cfg = get_config("qwen3_0_6b", reduced=True)
+    rules = activation_rules(cfg, mesh)
+
+    def fn(x):
+        return constrain(x, "batch", None, "heads", None) * 2
+
+    x = jnp.ones((2, 3, cfg.n_heads, 4))
+    out = jax.jit(bind_activation_rules(fn, rules))(x)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(x) * 2)
+
+
+# ---------------------------------------------------------------------------
+# no-mesh regression
+# ---------------------------------------------------------------------------
+
+def test_import_transformer_without_mesh():
+    """`import repro.models.transformer` (and a forward pass) must work in a
+    fresh process with no mesh/rules active — the dist layer is opt-in."""
+    code = (
+        "import jax, numpy as np;"
+        "from repro.configs import get_config;"
+        "from repro.models.transformer import forward, init_params;"
+        "cfg = get_config('qwen3_0_6b', reduced=True);"
+        "params = init_params(cfg, jax.random.PRNGKey(0));"
+        "logits, aux = forward(params, cfg, {'tokens': np.zeros((2, 8), np.int32)});"
+        "assert logits.shape[:2] == (2, 8), logits.shape;"
+        "print('NO_MESH_OK')"
+    )
+    import os
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(os.path.dirname(
+                   os.path.dirname(os.path.abspath(__file__))), "src"))
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=300)
+    assert "NO_MESH_OK" in out.stdout, out.stdout[-2000:] + out.stderr[-2000:]
