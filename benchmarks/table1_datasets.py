@@ -5,14 +5,27 @@ counts, base memory.
 the paper's memory-wall column) is counted exactly for edges/triangles via
 sparse adjacency intersection; the paper's point is that ``n_e`` (what Dory
 stores) is orders of magnitude below ``N``.
+
+``--large`` adds the regime the dense path cannot touch: o3/torus4 at 50k+
+points through the ``repro.scale`` tiled builder under a byte budget — the
+dense ``(n, n)`` float64 matrix alone would be 20+ GB — asserting that peak
+filtration memory (one tile + COO harvest + the paper's base account) stays
+under budget.
+
+    PYTHONPATH=src python -m benchmarks.table1_datasets [--scale S]
+        [--large] [--large-n 50000] [--budget-mb 96]
 """
 from __future__ import annotations
 
+import argparse
+import time
 from typing import Dict, List
 
 import numpy as np
 
 from repro.core.filtration import build_filtration
+from repro.data import pointclouds as pc
+from repro.scale import build_filtration_tiled, estimate_tau_max
 
 from .suite import Dataset, build_suite
 
@@ -50,13 +63,73 @@ def run(scale: float = 1.0) -> List[Dict]:
     return rows
 
 
-def main(scale: float = 1.0) -> None:
-    rows = run(scale)
+def run_large(large_n: int = 50_000, budget_mb: float = 96.0,
+              tile: int = 2048, datasets=("torus4", "o3")) -> List[Dict]:
+    """Large-n rows via the tiled builder — impossible on the dense path.
+
+    Picks ``tau_max`` from the byte budget, streams the build, and asserts
+    the memory account: base memory fits the budget and peak transient
+    memory is one tile + O(n + n_e), orders of magnitude under the dense
+    ``(n, n)`` matrix the seed builder would allocate.
+    """
+    budget = int(budget_mb * 2**20)
+    makers = {"torus4": lambda n: pc.clifford_torus(n, seed=0),
+              "o3": lambda n: pc.o3_points(n, seed=0)}
+    rows = []
+    for name in datasets:
+        pts = makers[name](large_n)
+        tau = estimate_tau_max(pts, budget, seed=0)
+        t0 = time.perf_counter()
+        filt, stats = build_filtration_tiled(points=pts, tau_max=tau,
+                                             tile_m=tile, tile_n=tile,
+                                             return_stats=True)
+        t_build = time.perf_counter() - t0
+        base = filt.base_memory_bytes()
+        peak = stats.peak_extra_bytes() + base
+        dense_bytes = large_n * large_n * 8       # f64 dists the seed needs
+        assert base <= 1.2 * budget, (name, base, budget)
+        # the streamed-build guarantee: one tile (f64 + two bool masks) plus
+        # O(n_e) COO merge transients — never an O(n^2) term
+        tile_scratch = tile * tile * 10
+        assert stats.peak_extra_bytes() <= tile_scratch + 48 * filt.n_e \
+            + 2**20, (name, stats.peak_extra_bytes(), tile_scratch, filt.n_e)
+        assert filt.dense_order is None           # no O(n^2) order matrix
+        rows.append(dict(
+            dataset=f"{name}@{large_n}", n=filt.n,
+            tau_max=round(float(tau), 4), d="1 (tiled)", n_e=filt.n_e,
+            n_triangles=-1,
+            base_memory_mb=round(base / 2**20, 3),
+            peak_build_mb=round(peak / 2**20, 3),
+            dense_path_mb=round(dense_bytes / 2**20, 1),
+            t_build_s=round(t_build, 2),
+            edge_density=round(
+                filt.n_e / (filt.n * (filt.n - 1) / 2), 6),
+        ))
+    return rows
+
+
+def _print_rows(rows: List[Dict]) -> None:
     cols = list(rows[0].keys())
     print(",".join(cols))
     for r in rows:
         print(",".join(str(r[c]) for c in cols))
 
 
+def main(scale: float = 1.0, large: bool = False, large_n: int = 50_000,
+         budget_mb: float = 96.0) -> None:
+    _print_rows(run(scale))
+    if large:
+        print()
+        _print_rows(run_large(large_n=large_n, budget_mb=budget_mb))
+
+
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--scale", type=float, default=1.0)
+    ap.add_argument("--large", action="store_true",
+                    help="add 50k+-point tiled rows (minutes of CPU)")
+    ap.add_argument("--large-n", type=int, default=50_000)
+    ap.add_argument("--budget-mb", type=float, default=96.0)
+    args = ap.parse_args()
+    main(args.scale, large=args.large, large_n=args.large_n,
+         budget_mb=args.budget_mb)

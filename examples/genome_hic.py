@@ -8,7 +8,14 @@ computes H0/H1/H2 for both conditions; the paper's Fig. 21 result is the
 signed direction of the change — auxin REMOVES loops (H1 down, strongly)
 and voids (H2 down).
 
+At the default laptop scale the dense builder is fine; pass
+``--backend tiled`` (optionally with ``--memory-budget-mb``) to stream the
+filtration through ``repro.scale`` instead — the 50k-200k-loci regimes of a
+real Hi-C map, where a dense ``(n, n)`` matrix would not fit, run only there:
+
     PYTHONPATH=src python examples/genome_hic.py [--n 400] [--loops 24]
+    PYTHONPATH=src python examples/genome_hic.py --n 50000 --loops 200 \
+        --backend tiled --memory-budget-mb 128 --maxdim 1
 """
 import argparse
 
@@ -30,15 +37,42 @@ def main() -> None:
     ap.add_argument("--loops", type=int, default=24)
     ap.add_argument("--tau-max", type=float, default=0.8)
     ap.add_argument("--maxdim", type=int, default=2)
+    ap.add_argument("--backend", choices=("dense", "tiled"), default="dense",
+                    help="'tiled' streams the filtration (repro.scale); "
+                         "required beyond a few thousand loci")
+    ap.add_argument("--memory-budget-mb", type=float, default=None,
+                    help="tiled backend: pick tau_max so the filtration "
+                         "fits this many MB (overrides --tau-max)")
+    ap.add_argument("--tile", type=int, default=2048)
     args = ap.parse_args()
 
     control, auxin = hic_pair(args.n, n_loops=args.loops, seed=1)
-    print(f"genome-like cloud: {args.n} loci, {args.loops} cohesin loops")
+    print(f"genome-like cloud: {args.n} loci, {args.loops} cohesin loops "
+          f"({args.backend} filtration)")
 
-    res_c = compute_ph(points=control, tau_max=args.tau_max,
-                       maxdim=args.maxdim, engine="batch")
-    res_a = compute_ph(points=auxin, tau_max=args.tau_max,
-                       maxdim=args.maxdim, engine="batch")
+    eff_tau = args.tau_max
+    if args.memory_budget_mb is not None:
+        if args.backend != "tiled":
+            ap.error("--memory-budget-mb requires --backend tiled")
+        from repro.scale import estimate_tau_max
+
+        # one shared threshold for both conditions: per-condition budgets
+        # would pick different tau (the budget fixes n_e, not scale) and
+        # feature counts at different tau are not comparable
+        budget = int(args.memory_budget_mb * 2**20)
+        eff_tau = min(estimate_tau_max(control, budget),
+                      estimate_tau_max(auxin, budget))
+        if not np.isfinite(eff_tau):
+            # budget covers the full clique — fall back to the geometric cap
+            eff_tau = args.tau_max
+        print(f"budgeted tau_max: {eff_tau:.3f} "
+              f"({args.memory_budget_mb:g} MB for both conditions)")
+
+    ph_kwargs = dict(maxdim=args.maxdim, engine="batch",
+                     backend=args.backend, tile_m=args.tile,
+                     tile_n=args.tile, tau_max=eff_tau)
+    res_c = compute_ph(points=control, **ph_kwargs)
+    res_a = compute_ph(points=auxin, **ph_kwargs)
 
     for d in range(1, args.maxdim + 1):
         pc, pa = res_c.diagrams[d], res_a.diagrams[d]
@@ -52,7 +86,7 @@ def main() -> None:
               f"({pct:+.1f}% — paper Fig. 21 expects a decrease)")
 
     # betti-1 curve over scale (Fig. 21's x-axis is the threshold)
-    taus = np.linspace(0.05, args.tau_max * 0.9, 8)
+    taus = np.linspace(0.05, eff_tau * 0.9, 8)
     bc = betti_curve(res_c.diagrams[1], taus)
     ba = betti_curve(res_a.diagrams[1], taus)
     print("tau:     ", "  ".join(f"{t:5.2f}" for t in taus))

@@ -68,20 +68,24 @@ def h2_columns(filt: Filtration, h1_pivots: np.ndarray,
 
     Triangles are grouped by diameter edge (descending), ks descending within
     a group — exactly paper Alg. 3 lines 12-15.  Triangles that were H1*
-    pivots (deaths) are cleared.
+    pivots (deaths) are cleared — one ``np.isin`` per batch rather than a
+    per-triangle Python set probe, so column assembly no longer dominates at
+    large ``n_e``.
     """
-    cleared = set(int(k) for k in h1_pivots)
-    cols = []
+    pivots = np.asarray(h1_pivots, dtype=np.int64)
+    chunks = []
     edge_ids = np.arange(filt.n_e - 1, -1, -1, dtype=np.int64)
     batch = 2048
     for s in range(0, len(edge_ids), batch):
         ids = edge_ids[s:s + batch]
         groups = cb.case1_triangles_of_edges(filt, ids, sparse=sparse)
-        for keys in groups:
-            for k in keys[::-1]:           # ks descending within the group
-                if int(k) not in cleared:
-                    cols.append(int(k))
-    return np.array(cols, dtype=np.int64)
+        keys = np.concatenate([g[::-1] for g in groups]) if groups \
+            else np.zeros(0, dtype=np.int64)
+        if keys.size and pivots.size:
+            keys = keys[~np.isin(keys, pivots)]
+        if keys.size:
+            chunks.append(keys)
+    return np.concatenate(chunks) if chunks else np.zeros(0, dtype=np.int64)
 
 
 @dataclasses.dataclass
@@ -109,25 +113,51 @@ def compute_ph(
     filtration: Optional[Filtration] = None,
     engine: str = "single",
     batch_size: int = 128,
+    backend: str = "dense",
+    memory_budget_bytes: Optional[int] = None,
+    tile_m: int = 2048,
+    tile_n: int = 2048,
 ) -> PHResult:
     """Persistent homology up to ``maxdim`` (<= 2), Dory pipeline.
 
     mode: "explicit" stores R^⊥ (paper Alg. 1 spirit), "implicit" stores only
     V^⊥ (paper Alg. 2 / fast implicit column spirit).
     sparse: neighborhoods (Dory) vs dense order matrix (DoryNS); default picks
-    NS for small n where the O(n^2) table is cheap.
+    NS for small n where the O(n^2) table is cheap, and always picks the
+    order-free sparse path for streamed filtrations (no dense order matrix).
     engine: "single" (1-thread analog) or "batch" (serial-parallel, §4.4).
+    backend: "dense" materializes the (n, n) distance matrix (seed behavior);
+    "tiled" streams it through ``repro.scale`` in (tile_m, tile_n) blocks —
+    peak filtration memory O(tile + n + n_e), the million-point path.  With
+    ``memory_budget_bytes`` and no finite ``tau_max``, the threshold is
+    auto-picked so the paper's ``(3n + 12 n_e) * 4`` account fits the budget.
     """
     stats: Dict[str, float] = {}
     t0 = time.perf_counter()
-    filt = filtration if filtration is not None else build_filtration(
-        points=points, dists=dists, tau_max=tau_max)
+    if filtration is not None:
+        filt = filtration
+    elif backend == "tiled":
+        from ..scale import build_filtration_tiled, estimate_tau_max
+
+        if memory_budget_bytes is not None and not np.isfinite(tau_max):
+            if points is None:
+                raise ValueError(
+                    "memory_budget_bytes needs points to estimate tau_max")
+            tau_max = estimate_tau_max(points, memory_budget_bytes)
+            stats["tau_max_estimated"] = float(tau_max)
+        filt = build_filtration_tiled(points=points, dists=dists,
+                                      tau_max=tau_max,
+                                      tile_m=tile_m, tile_n=tile_n)
+    elif backend == "dense":
+        filt = build_filtration(points=points, dists=dists, tau_max=tau_max)
+    else:
+        raise ValueError(f"unknown backend {backend!r}")
     stats["t_filtration"] = time.perf_counter() - t0
     stats["n"] = float(filt.n)
     stats["n_e"] = float(filt.n_e)
     stats["base_memory_bytes"] = float(filt.base_memory_bytes())
     if sparse is None:
-        sparse = filt.n > 1024
+        sparse = (not filt.has_dense_order) or filt.n > 1024
     if engine == "batch":
         from .serial_parallel import reduce_dimension_batched
 
@@ -149,8 +179,7 @@ def compute_ph(
         t0 = time.perf_counter()
         adapter1 = make_h1_adapter(filt, sparse=sparse)
         cols1 = np.arange(filt.n_e - 1, -1, -1, dtype=np.int64)
-        cleared1 = set(int(e) for e in h0.death_edges)
-        res1 = _reduce(adapter1, cols1, mode=mode, cleared=cleared1)
+        res1 = _reduce(adapter1, cols1, mode=mode, cleared=h0.death_edges)
         diagrams[1] = res1.diagram()
         stats["t_h1"] = time.perf_counter() - t0
         for k, v in res1.stats.items():

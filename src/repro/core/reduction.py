@@ -140,28 +140,46 @@ class PivotStore:
             self.bytes_stored += gens.nbytes
 
 
+def clearing_filter(column_ids, cleared) -> np.ndarray:
+    """Drop cleared ids from ``column_ids``, order preserved (vectorized).
+
+    ``cleared`` may be a set (legacy callers) or any int array-like; one
+    ``np.isin`` replaces the former per-column Python membership loop, which
+    dominated at large ``n_e``.
+    """
+    ids = np.asarray(column_ids, dtype=np.int64)
+    if cleared is None:
+        return ids
+    if isinstance(cleared, (set, frozenset)):
+        carr = np.fromiter(cleared, dtype=np.int64, count=len(cleared))
+    else:
+        carr = np.asarray(cleared, dtype=np.int64)
+    if ids.size == 0 or carr.size == 0:
+        return ids
+    return ids[~np.isin(ids, carr)]
+
+
 def reduce_dimension(
     adapter: DimensionAdapter,
     column_ids: np.ndarray,
     mode: str = "explicit",
-    cleared: Optional[set] = None,
+    cleared=None,
     return_store: bool = False,
 ):
     """Single-column (paper 1-thread) cohomology reduction.
 
     ``column_ids`` must be in *decreasing* filtration order (``F^-1``), with
-    clearing already applied or supplied via ``cleared``.
+    clearing already applied or supplied via ``cleared`` (set or int array).
     """
     store = PivotStore(adapter, mode)
     pairs: List[tuple] = []
     essentials: List[float] = []
     n_reductions = 0
-    cleared = cleared or set()
+    n_columns_in = len(column_ids)
+    column_ids = clearing_filter(column_ids, cleared)
 
     for col_id in column_ids:
         col_id = int(col_id)
-        if col_id in cleared:
-            continue
         r = adapter.cobdy(np.array([col_id], dtype=np.int64))[0]
         r = r[r != EMPTY_KEY]
         gens_parity: Dict[int, int] = {}
@@ -202,7 +220,7 @@ def reduce_dimension(
     result = ReductionResult(
         pairs=pair_arr, essentials=ess_arr, pivot_lows=pivot_lows,
         stats={
-            "n_columns": float(len(column_ids)),
+            "n_columns": float(n_columns_in),
             "n_reductions": float(n_reductions),
             "n_pairs": float(len(pairs)),
             "n_essential": float(len(essentials)),

@@ -21,13 +21,13 @@ paper's batch-size hyperparameter discussion.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional
+from typing import Dict, List
 
 import numpy as np
 
 from .pairing import EMPTY_KEY
 from .reduction import (DimensionAdapter, PivotStore, ReductionResult,
-                        merge_cancel)
+                        clearing_filter, merge_cancel)
 
 
 def _reduce_vs_store(store: PivotStore, adapter: DimensionAdapter,
@@ -66,16 +66,14 @@ def reduce_dimension_batched(
     adapter: DimensionAdapter,
     column_ids: np.ndarray,
     mode: str = "explicit",
-    cleared: Optional[set] = None,
+    cleared=None,
     batch_size: int = 128,
 ) -> ReductionResult:
     store = PivotStore(adapter, mode)
     pairs: List[tuple] = []
     essentials: List[float] = []
     n_reductions = 0
-    cleared = cleared or set()
-    queue = np.array([c for c in column_ids if int(c) not in cleared],
-                     dtype=np.int64)
+    queue = clearing_filter(column_ids, cleared)
 
     for s in range(0, len(queue), batch_size):
         ids = queue[s:s + batch_size]

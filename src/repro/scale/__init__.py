@@ -1,0 +1,22 @@
+"""repro.scale: streaming tiled filtration for million-point PH (paper §5-6).
+
+Builds the sparse Dory :class:`~repro.core.filtration.Filtration` without any
+``O(n^2)`` allocation: tiled distance harvesting (``tiles``), byte-budget
+``tau_max`` estimation + maxmin landmarks (``budget``), and sparse COO
+distance input (``sparse_input``).  Entry via ``build_filtration_tiled`` /
+``build_filtration_coo`` directly, or ``compute_ph(..., backend="tiled",
+memory_budget_bytes=...)``.
+"""
+from .budget import (edge_budget, estimate_tau_max, landmark_points,
+                     maxmin_landmarks, sample_pair_lengths)
+from .sparse_input import (build_filtration_coo, contacts_to_distances,
+                           coo_symmetrize)
+from .tiles import (TileStats, build_filtration_tiled, harvest_edges,
+                    iter_tile_edges)
+
+__all__ = [
+    "TileStats", "build_filtration_tiled", "harvest_edges", "iter_tile_edges",
+    "edge_budget", "estimate_tau_max", "maxmin_landmarks", "landmark_points",
+    "sample_pair_lengths",
+    "build_filtration_coo", "contacts_to_distances", "coo_symmetrize",
+]

@@ -1,0 +1,115 @@
+"""Edge-budget estimation + landmark subsampling (paper §5, appendix E).
+
+Dory's memory story is the ``(3n + 12 n_e) * 4``-byte base account: for a
+fixed byte budget the only free knob is ``n_e``, i.e. ``tau_max``.  This
+module picks ``tau_max`` *before* any build by sampling pairwise distances
+from random tile pairs (never the full matrix) and inverting the empirical
+distance CDF at the edge count the budget affords.
+
+For workloads where even the budgeted ``n_e`` is too dense, greedy maxmin
+(farthest-point) landmark selection gives the standard sparsified-Rips
+fallback: ``O(n k)`` time, ``O(n)`` memory, with the cover radius returned so
+callers can bound the interleaving error of the subsampled diagram.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import numpy as np
+
+from ..core.filtration import pair_sq_dists
+
+
+def edge_budget(n: int, memory_budget_bytes: int) -> int:
+    """Largest ``n_e`` with ``(3n + 12 n_e) * 4 <= memory_budget_bytes``."""
+    return max(0, (int(memory_budget_bytes) // 4 - 3 * n) // 12)
+
+
+def sample_pair_lengths(points: np.ndarray, n_samples: int = 200_000,
+                        seed: int = 0) -> np.ndarray:
+    """Exact lengths of ``n_samples`` uniform random (i < j) pairs."""
+    points = np.asarray(points, dtype=np.float64)
+    n = points.shape[0]
+    if n < 2:
+        return np.zeros(0)
+    rng = np.random.default_rng(seed)
+    iu = rng.integers(0, n, size=n_samples)
+    ju = rng.integers(0, n, size=n_samples)
+    neq = iu != ju
+    iu, ju = iu[neq], ju[neq]
+    lo = np.minimum(iu, ju)
+    hi = np.maximum(iu, ju)
+    return np.sqrt(pair_sq_dists(points, lo, hi))
+
+
+def estimate_tau_max(
+    points: np.ndarray,
+    memory_budget_bytes: int,
+    n_samples: int = 200_000,
+    seed: int = 0,
+    safety: float = 0.9,
+) -> float:
+    """Pick ``tau_max`` so the expected ``n_e`` fits the byte budget.
+
+    The empirical CDF of sampled pair lengths estimates
+    ``n_e(tau) ~= q(tau) * n(n-1)/2``; we take the quantile at the budgeted
+    edge fraction, shrunk by ``safety`` to absorb sampling error.  Returns
+    ``inf`` when the budget covers the full clique.
+    """
+    n = int(np.asarray(points).shape[0])
+    total_pairs = n * (n - 1) // 2
+    max_edges = edge_budget(n, memory_budget_bytes)
+    if max_edges <= 0:
+        raise ValueError(
+            f"memory_budget_bytes={memory_budget_bytes} cannot hold even the "
+            f"O(n) part of a filtration on n={n} points")
+    if total_pairs == 0 or max_edges >= total_pairs:
+        return float(np.inf)
+    lens = sample_pair_lengths(points, n_samples=n_samples, seed=seed)
+    q = min(1.0, safety * max_edges / total_pairs)
+    return float(np.quantile(lens, q))
+
+
+def maxmin_landmarks(
+    points: np.ndarray,
+    k: int,
+    seed: int = 0,
+    first: Optional[int] = None,
+) -> Tuple[np.ndarray, float]:
+    """Greedy farthest-point (maxmin) landmark selection.
+
+    Returns ``(indices, cover_radius)``: up to ``k`` landmark indices into
+    ``points`` and the final covering radius ``max_i min_l d(x_i, x_l)`` —
+    the Hausdorff distance between cloud and landmarks, which bounds the
+    bottleneck error of the sparsified-Rips diagram.  Stops early (fewer
+    than ``k`` indices) once the cloud is exactly covered — duplicate points
+    never yield duplicate landmarks.  ``O(n k)`` time, ``O(n)`` memory: one
+    running min-distance vector, no pairwise matrix.
+    """
+    points = np.asarray(points, dtype=np.float64)
+    n = points.shape[0]
+    k = min(int(k), n)
+    if k <= 0:
+        return np.zeros(0, dtype=np.int64), float(np.inf)
+    rng = np.random.default_rng(seed)
+    idx = np.empty(k, dtype=np.int64)
+    idx[0] = int(rng.integers(0, n)) if first is None else int(first)
+    sq = np.sum(points * points, axis=1)
+    all_ids = np.arange(n, dtype=np.int64)
+    mind = np.sqrt(pair_sq_dists(points, np.full(n, idx[0], dtype=np.int64),
+                                 all_ids, sq))
+    for t in range(1, k):
+        if mind.max() == 0.0:
+            return idx[:t].copy(), 0.0
+        idx[t] = int(np.argmax(mind))
+        d = np.sqrt(pair_sq_dists(points, np.full(n, idx[t], dtype=np.int64),
+                                  all_ids, sq))
+        np.minimum(mind, d, out=mind)
+    return idx, float(mind.max())
+
+
+def landmark_points(points: np.ndarray, k: int, seed: int = 0,
+                    first: Optional[int] = None):
+    """Convenience: ``(points[idx], idx, cover_radius)`` for maxmin landmarks."""
+    idx, radius = maxmin_landmarks(points, k, seed=seed, first=first)
+    return np.asarray(points, dtype=np.float64)[idx], idx, radius

@@ -1,0 +1,270 @@
+"""Streaming tiled filtration construction (million-point path, paper §5-6).
+
+``build_filtration`` materializes a dense ``(n, n)`` float64 distance matrix,
+which hard-caps the repo at a few thousand points — the exact barrier the
+paper removes.  This module constructs the *same* sparse :class:`Filtration`
+without ever holding an ``O(n^2)`` array:
+
+* the distance matrix is computed tile-by-tile over ``(tile_m, tile_n)``
+  blocks (numpy host path, or the Pallas ``pairwise_sq_dists`` TPU kernel);
+* each tile is thresholded against ``tau_max`` in place and the surviving
+  ``(i, j, length)`` triplets are harvested as COO chunks;
+* chunks are merged into the globally sorted canonical edge list
+  (``(length, i, j)`` lexicographic) and handed to
+  ``filtration_from_edges`` — total extra memory is one tile plus
+  ``O(n + n_e)``, never ``O(n^2)``.
+
+Bit-identity with the dense path is guaranteed, not hoped for: both paths
+compute distances with the fixed-order ``cross_term`` / ``block_sq_dists``
+kernels from ``core.filtration`` (BLAS matmul changes accumulation order with
+operand shape, so it could not provide this invariant).  The Pallas backend
+computes tiles in float32 as a *candidate filter* only — candidates within a
+conservative error margin of ``tau_max`` are re-measured exactly in float64
+(``pair_sq_dists``) on the sparse candidate set, so its output is also
+bit-identical to the dense build.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, Optional, Tuple
+
+import numpy as np
+
+from ..core.filtration import (Filtration, block_sq_dists,
+                               filtration_from_edges, pair_sq_dists)
+
+DEFAULT_TILE = 2048
+
+
+@dataclasses.dataclass
+class TileStats:
+    """Accounting for one streamed build (benchmarks assert against this)."""
+
+    n: int = 0
+    n_e: int = 0
+    tile_m: int = 0
+    tile_n: int = 0
+    backend: str = "numpy"
+    tiles_visited: int = 0
+    candidate_pairs: int = 0      # pallas path: f32 candidates refined in f64
+    peak_tile_bytes: int = 0      # largest per-tile scratch
+    harvest_bytes: int = 0        # final sorted COO triplet arrays
+    merge_peak_bytes: int = 0     # worst transient during concat + lexsort
+    base_memory_bytes: int = 0    # paper (3n + 12 n_e) * 4 for the result
+
+    def peak_extra_bytes(self) -> int:
+        """Peak transient memory of the build: one tile + the merge worst case
+        (chunks + concat copy, then sort index + permuted copies)."""
+        return self.peak_tile_bytes + max(self.merge_peak_bytes,
+                                          self.harvest_bytes)
+
+
+def _resolve_backend(backend: str) -> str:
+    if backend == "auto":
+        try:
+            import jax
+            return "pallas" if jax.default_backend() == "tpu" else "numpy"
+        except ImportError:
+            return "numpy"
+    if backend not in ("numpy", "pallas"):
+        raise ValueError(f"unknown tile backend {backend!r}")
+    return backend
+
+
+def _f32_margin(sq_max: float, d: int) -> float:
+    """Upper bound on |d2_f32 - d2_f64| for the Pallas candidate filter.
+
+    Input rounding to f32 plus the f32 Gram accumulation each contribute
+    O(eps32) per term; 8 * (d + 4) terms is a deliberately loose constant —
+    a too-wide margin only means a few extra candidates get the exact f64
+    re-measure, never a missed edge.
+    """
+    eps32 = float(np.finfo(np.float32).eps)
+    return 8.0 * (d + 4) * eps32 * max(sq_max, 1.0) * 4.0
+
+
+def iter_tile_edges(
+    points: Optional[np.ndarray] = None,
+    dists: Optional[np.ndarray] = None,
+    tau_max: float = np.inf,
+    tile_m: int = DEFAULT_TILE,
+    tile_n: int = DEFAULT_TILE,
+    backend: str = "auto",
+    interpret: Optional[bool] = None,
+    stats: Optional[TileStats] = None,
+) -> Iterator[Tuple[np.ndarray, np.ndarray, np.ndarray]]:
+    """Yield COO edge chunks ``(iu, ju, lens)`` per tile, ``i < j`` only.
+
+    Every unordered pair (i < j) lives in exactly one tile — the one indexed
+    by ``(i // tile_m, j // tile_n)`` — so chunks are disjoint and their
+    union is exactly the dense path's thresholded upper triangle.
+    """
+    if (points is None) == (dists is None):
+        raise ValueError("provide exactly one of points or dists")
+    backend = _resolve_backend(backend) if points is not None else "numpy"
+    if stats is not None:
+        stats.tile_m, stats.tile_n, stats.backend = tile_m, tile_n, backend
+
+    if dists is not None:
+        dists = np.asarray(dists)
+        n = dists.shape[0]
+        if dists.shape != (n, n):
+            raise ValueError(f"dists must be square, got {dists.shape}")
+    else:
+        points = np.asarray(points, dtype=np.float64)
+        n = points.shape[0]
+        sq = np.sum(points * points, axis=1)
+        if backend == "pallas":
+            import jax.numpy as jnp
+
+            from ..kernels.pairwise_dist import pairwise_sq_dists
+            pts32 = jnp.asarray(points, dtype=jnp.float32)
+            margin = _f32_margin(float(sq.max()) if n else 1.0,
+                                 points.shape[1])
+            thr32 = np.float32(tau_max * tau_max + margin) \
+                if np.isfinite(tau_max) else np.float32(np.inf)
+    if stats is not None:
+        stats.n = n
+
+    for si in range(0, n, tile_m):
+        ei = min(si + tile_m, n)
+        for sj in range(0, n, tile_n):
+            ej = min(sj + tile_n, n)
+            if si >= ej - 1:
+                continue                      # tile strictly below diagonal
+            # tiles fully above the diagonal (the vast majority for large n)
+            # need no i<j mask at all
+            upper = None if ei - 1 < sj else \
+                (np.arange(si, ei)[:, None] < np.arange(sj, ej)[None, :])
+            upper_bytes = 0 if upper is None else upper.nbytes
+            if stats is not None:
+                stats.tiles_visited += 1
+
+            if dists is not None:
+                lens_tile = np.asarray(dists[si:ei, sj:ej], dtype=np.float64)
+                mask = lens_tile <= tau_max
+                if upper is not None:
+                    mask &= upper
+                if stats is not None:
+                    stats.peak_tile_bytes = max(
+                        stats.peak_tile_bytes,
+                        lens_tile.nbytes + mask.nbytes + upper_bytes)
+                ri, rj = np.nonzero(mask)
+                yield si + ri, sj + rj, lens_tile[ri, rj]
+                continue
+
+            if backend == "pallas":
+                d2_32 = np.asarray(pairwise_sq_dists(
+                    pts32[si:ei], pts32[sj:ej], interpret=interpret))
+                cand = d2_32 <= thr32
+                if upper is not None:
+                    cand &= upper
+                if stats is not None:
+                    stats.peak_tile_bytes = max(
+                        stats.peak_tile_bytes,
+                        d2_32.nbytes + cand.nbytes + upper_bytes)
+                ri, rj = np.nonzero(cand)
+                iu, ju = si + ri, sj + rj
+                # exact f64 re-measure on the sparse candidate set
+                lens = np.sqrt(pair_sq_dists(points, iu, ju, sq))
+                if stats is not None:
+                    stats.candidate_pairs += int(iu.size)
+                keep = lens <= tau_max
+                yield iu[keep], ju[keep], lens[keep]
+                continue
+
+            d2 = block_sq_dists(points[si:ei], points[sj:ej],
+                                sq[si:ei], sq[sj:ej])
+            lens_tile = np.sqrt(d2, out=d2)
+            mask = lens_tile <= tau_max
+            if upper is not None:
+                mask &= upper
+            if stats is not None:
+                stats.peak_tile_bytes = max(
+                    stats.peak_tile_bytes,
+                    lens_tile.nbytes + mask.nbytes + upper_bytes)
+            ri, rj = np.nonzero(mask)
+            yield si + ri, sj + rj, lens_tile[ri, rj]
+
+
+def harvest_edges(
+    points: Optional[np.ndarray] = None,
+    dists: Optional[np.ndarray] = None,
+    tau_max: float = np.inf,
+    tile_m: int = DEFAULT_TILE,
+    tile_n: int = DEFAULT_TILE,
+    backend: str = "auto",
+    interpret: Optional[bool] = None,
+    stats: Optional[TileStats] = None,
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """All permissible edges as one globally sorted COO list.
+
+    Chunks stream out of :func:`iter_tile_edges` and are merged with a single
+    ``(length, i, j)`` lexsort — the same canonical order the dense builder
+    uses, so downstream structures match bit for bit.  Chunk lists are
+    released as each concatenation lands so the merge's transient peak is
+    chunks + one concat copy, then sort index + permuted copies — recorded
+    honestly in ``TileStats.merge_peak_bytes``, not just the final arrays.
+    """
+    ii, jj, ll = [], [], []
+    chunk_bytes = 0
+    for iu, ju, lens in iter_tile_edges(points=points, dists=dists,
+                                        tau_max=tau_max, tile_m=tile_m,
+                                        tile_n=tile_n, backend=backend,
+                                        interpret=interpret, stats=stats):
+        ii.append(iu.astype(np.int64))
+        jj.append(ju.astype(np.int64))
+        ll.append(lens)
+        chunk_bytes += ii[-1].nbytes + jj[-1].nbytes + ll[-1].nbytes
+    iu = np.concatenate(ii) if ii else np.zeros(0, dtype=np.int64)
+    ii.clear()
+    ju = np.concatenate(jj) if jj else np.zeros(0, dtype=np.int64)
+    jj.clear()
+    lens = np.concatenate(ll) if ll else np.zeros(0)
+    ll.clear()
+    srt = np.lexsort((ju, iu, lens))
+    iu, ju, lens = iu[srt], ju[srt], lens[srt]
+    if stats is not None:
+        stats.n_e = int(lens.size)
+        stats.harvest_bytes = int(iu.nbytes + ju.nbytes + lens.nbytes)
+        # worst transient: all chunks + the first concat copy alive together,
+        # vs. final arrays + lexsort index + one permuted copy in flight
+        stats.merge_peak_bytes = max(chunk_bytes + iu.nbytes,
+                                     stats.harvest_bytes + srt.nbytes
+                                     + iu.nbytes)
+    return iu, ju, lens
+
+
+def build_filtration_tiled(
+    points: Optional[np.ndarray] = None,
+    dists: Optional[np.ndarray] = None,
+    tau_max: float = np.inf,
+    tile_m: int = DEFAULT_TILE,
+    tile_n: int = DEFAULT_TILE,
+    backend: str = "auto",
+    interpret: Optional[bool] = None,
+    with_dense_order: bool = False,
+    return_stats: bool = False,
+):
+    """Streamed :class:`Filtration` build — never allocates ``(n, n)``.
+
+    Output is bit-identical (edges, orders, lengths, neighborhoods) to
+    ``build_filtration`` on the same input, but peak memory is one
+    ``(tile_m, tile_n)`` tile plus ``O(n + n_e)``.  ``with_dense_order``
+    defaults to False so the result runs the order-free sparse Dory path;
+    flipping it restores DoryNS semantics (and the O(n^2) table).
+
+    Returns ``filt`` or ``(filt, TileStats)`` with ``return_stats``.
+    """
+    stats = TileStats()
+    iu, ju, lens = harvest_edges(points=points, dists=dists, tau_max=tau_max,
+                                 tile_m=tile_m, tile_n=tile_n,
+                                 backend=backend, interpret=interpret,
+                                 stats=stats)
+    filt = filtration_from_edges(stats.n, iu, ju, lens, tau_max,
+                                 presorted=True,
+                                 with_dense_order=with_dense_order)
+    stats.base_memory_bytes = filt.base_memory_bytes()
+    if return_stats:
+        return filt, stats
+    return filt

@@ -1,0 +1,305 @@
+"""repro.scale: streamed/tiled/sparse-input filtrations vs the dense builder.
+
+The contract under test is *bit-identity*: the tiled streaming build and the
+COO sparse-input build must produce exactly the same Filtration (edges,
+orders, lengths, neighborhoods) as dense ``build_filtration`` wherever both
+are defined — across tile sizes, tau thresholds sitting exactly on edge
+lengths, and duplicate-distance ties.  Runs under real hypothesis or the
+offline fallback shim registered by conftest.py.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import build_filtration, compute_ph
+from repro.core.filtration import (build_filtration as bf, pair_sq_dists,
+                                   pairwise_distances)
+from repro.core.homology import h2_columns, make_h1_adapter
+from repro.core.reduction import clearing_filter, reduce_dimension
+from repro.scale import (TileStats, build_filtration_coo,
+                         build_filtration_tiled, contacts_to_distances,
+                         coo_symmetrize, edge_budget, estimate_tau_max,
+                         harvest_edges, maxmin_landmarks)
+
+FILT_FIELDS = ("edges", "edge_len", "degree", "nbr_vtx", "nbr_vtx_ord",
+               "nbr_edge_ord", "nbr_edge_vtx")
+
+
+def assert_filtrations_identical(a, b, label=""):
+    assert a.n == b.n, label
+    assert a.n_e == b.n_e, (label, a.n_e, b.n_e)
+    for f in FILT_FIELDS:
+        assert np.array_equal(getattr(a, f), getattr(b, f)), (label, f)
+
+
+def tie_heavy_cloud(rng, n, d):
+    """Cloud with many duplicate distances (quantized coords + repeated rows)."""
+    pts = np.round(rng.normal(size=(n, d)), 1)
+    if n >= 4:
+        pts[n // 2] = pts[0]            # exact duplicate point (distance 0 tie)
+        pts[n // 3] = pts[1]
+    return pts
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.data())
+def test_tiled_bit_identical_to_dense(data):
+    n = data.draw(st.integers(2, 110), label="n")
+    d = data.draw(st.integers(1, 5), label="d")
+    tile_m = data.draw(st.sampled_from([3, 7, 16, 37, 64, 256]), label="tile_m")
+    tile_n = data.draw(st.sampled_from([4, 5, 23, 64, 128, 512]), label="tile_n")
+    seed = data.draw(st.integers(0, 2**16), label="seed")
+    ties = data.draw(st.booleans(), label="ties")
+    rng = np.random.default_rng(seed)
+    pts = tie_heavy_cloud(rng, n, d) if ties else rng.normal(size=(n, d))
+
+    # tau drawn to include inf, a quantile, and a value equal to a real edge
+    # length (the <= boundary must agree bitwise between the two paths)
+    mode = data.draw(st.sampled_from(["inf", "quantile", "exact-edge"]),
+                     label="tau_mode")
+    iu, ju = np.triu_indices(n, k=1)
+    all_lens = np.sqrt(pair_sq_dists(pts, iu, ju)) if iu.size else np.zeros(0)
+    if mode == "inf" or all_lens.size == 0:
+        tau = np.inf
+    elif mode == "quantile":
+        tau = float(np.quantile(all_lens, 0.4))
+    else:
+        tau = float(all_lens[data.draw(
+            st.integers(0, all_lens.size - 1), label="edge_pick")])
+
+    dense = build_filtration(points=pts, tau_max=tau)
+    tiled = build_filtration_tiled(points=pts, tau_max=tau,
+                                   tile_m=tile_m, tile_n=tile_n,
+                                   backend="numpy")
+    assert_filtrations_identical(dense, tiled, f"tiles {tile_m}x{tile_n}")
+    assert tiled.dense_order is None          # streamed build stays order-free
+    assert np.array_equal(tiled.order, dense.order)   # lazy materialization
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.data())
+def test_tiled_from_dists_matrix_matches(data):
+    n = data.draw(st.integers(2, 60), label="n")
+    tile = data.draw(st.sampled_from([5, 17, 64]), label="tile")
+    rng = np.random.default_rng(data.draw(st.integers(0, 2**16), label="seed"))
+    pts = rng.normal(size=(n, 3))
+    dmat = pairwise_distances(pts)
+    tau = float(np.quantile(dmat[np.triu_indices(n, k=1)], 0.5)) if n > 1 \
+        else np.inf
+    dense = build_filtration(dists=dmat, tau_max=tau)
+    tiled = build_filtration_tiled(dists=dmat, tau_max=tau,
+                                   tile_m=tile, tile_n=tile + 3)
+    assert_filtrations_identical(dense, tiled, "dists-matrix tiles")
+
+
+def test_pallas_backend_bit_identical():
+    """f32 Pallas candidate filter + f64 refine == dense, in interpret mode."""
+    rng = np.random.default_rng(3)
+    pts = rng.normal(size=(130, 4)) * 5.0       # larger scale stresses margin
+    tau = 6.0
+    dense = build_filtration(points=pts, tau_max=tau)
+    tiled, stats = build_filtration_tiled(
+        points=pts, tau_max=tau, tile_m=64, tile_n=48, backend="pallas",
+        interpret=True, return_stats=True)
+    assert_filtrations_identical(dense, tiled, "pallas")
+    assert stats.backend == "pallas"
+    assert stats.candidate_pairs >= dense.n_e    # filter may over-, never under-
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.data())
+def test_coo_input_matches_dense_dists(data):
+    n = data.draw(st.integers(2, 50), label="n")
+    nnz = data.draw(st.integers(0, 300), label="nnz")
+    tau = data.draw(st.sampled_from([0.5, 1.0, 2.5]), label="tau")
+    rng = np.random.default_rng(data.draw(st.integers(0, 2**16), label="seed"))
+    rows = rng.integers(0, n, size=nnz)
+    cols = rng.integers(0, n, size=nnz)
+    vals = rng.uniform(0.05, 3.0, size=nnz)
+
+    # dense reference: missing entries larger than any tau (no edge)
+    big = 1e18
+    dmat = np.full((n, n), big)
+    np.fill_diagonal(dmat, 0.0)
+    for i, j, v in zip(rows, cols, vals):
+        if i == j:
+            continue
+        a, b = min(i, j), max(i, j)
+        dmat[a, b] = dmat[b, a] = min(dmat[a, b], v)
+
+    coo = build_filtration_coo(rows, cols, vals, n=n, tau_max=tau)
+    dense = build_filtration(dists=dmat, tau_max=tau)
+    assert_filtrations_identical(coo, dense, "coo")
+    assert coo.dense_order is None
+
+
+def test_coo_symmetrize_dedup_rules():
+    rows = np.array([0, 1, 2, 2, 0, 3])
+    cols = np.array([1, 0, 2, 0, 2, 0])
+    vals = np.array([0.5, 0.3, 9.9, 1.0, 2.0, 4.0])
+    n, iu, ju, v = coo_symmetrize(rows, cols, vals)
+    assert n == 4
+    # diagonal (2,2) dropped; (0,1)/(1,0) dedup to min 0.3; (2,0)/(0,2) -> 1.0
+    tri = {(int(a), int(b)): float(x) for a, b, x in zip(iu, ju, v)}
+    assert tri == {(0, 1): 0.3, (0, 2): 1.0, (0, 3): 4.0}
+    assert np.all(iu < ju)
+
+
+def test_contacts_to_distances_power_law():
+    c = np.array([0.0, 1.0, 4.0, -2.0])
+    d = contacts_to_distances(c, alpha=-0.5, scale=2.0)
+    assert np.isinf(d[0]) and np.isinf(d[3])
+    assert d[1] == pytest.approx(2.0)
+    assert d[2] == pytest.approx(1.0)
+
+
+def test_coo_inf_entries_never_become_edges():
+    """inf = 'no information' must stay a non-edge even at tau_max=inf."""
+    rows = np.array([0, 1, 2])
+    cols = np.array([1, 2, 3])
+    vals = np.array([0.5, np.inf, 1.5])
+    filt = build_filtration_coo(rows, cols, vals, n=4, tau_max=np.inf)
+    assert filt.n_e == 2
+    assert sorted(map(tuple, filt.edges.tolist())) == [(0, 1), (2, 3)]
+
+
+def test_budget_tau_fits_memory_account():
+    rng = np.random.default_rng(7)
+    pts = rng.normal(size=(400, 3))
+    budget = 150_000
+    tau = estimate_tau_max(pts, budget, n_samples=100_000, seed=0)
+    assert np.isfinite(tau) and tau > 0
+    filt = build_filtration_tiled(points=pts, tau_max=tau,
+                                  tile_m=128, tile_n=128)
+    # quantile estimate + 0.9 safety: actual n_e lands under the budgeted
+    # count up to sampling noise
+    assert filt.n_e <= 1.1 * edge_budget(len(pts), budget) + 16
+    assert filt.base_memory_bytes() <= 1.15 * budget
+
+
+def test_budget_edge_cases():
+    assert edge_budget(100, (3 * 100 + 12 * 50) * 4) == 50
+    rng = np.random.default_rng(0)
+    pts = rng.normal(size=(30, 2))
+    # huge budget -> full clique allowed -> inf
+    assert np.isinf(estimate_tau_max(pts, 10**9))
+    with pytest.raises(ValueError):
+        estimate_tau_max(pts, 10)     # cannot hold even the O(n) part
+
+
+def test_maxmin_landmarks_properties():
+    rng = np.random.default_rng(11)
+    pts = rng.normal(size=(200, 3))
+    idx16, r16 = maxmin_landmarks(pts, 16, seed=0)
+    idx64, r64 = maxmin_landmarks(pts, 64, seed=0)
+    assert len(np.unique(idx16)) == 16 and len(np.unique(idx64)) == 64
+    assert r64 <= r16                       # more landmarks, tighter cover
+    # returned radius is the true Hausdorff distance to the landmark set
+    dm = pairwise_distances(pts)
+    assert r16 == pytest.approx(dm[:, idx16].min(axis=1).max())
+    # full-cloud landmarks cover exactly
+    idx_all, r_all = maxmin_landmarks(pts, 200, seed=0)
+    assert len(idx_all) == 200 and r_all == pytest.approx(0.0)
+    # duplicate points: early stop, never duplicated landmarks
+    dup = np.zeros((10, 2))
+    idx_dup, r_dup = maxmin_landmarks(dup, 5, seed=0)
+    assert len(idx_dup) == 1 and r_dup == 0.0
+
+
+def test_pairwise_distances_blocked_and_clamped():
+    rng = np.random.default_rng(5)
+    pts = rng.normal(size=(97, 4)) * 100.0
+    pts[1] = pts[0]                          # exact duplicate
+    pts[2] = pts[0] + 1e-9                   # near-duplicate: cancellation
+    for block in (7, 32, 97, 4096):
+        dm = pairwise_distances(pts, block_rows=block)
+        assert dm.shape == (97, 97)
+        assert np.all(np.isfinite(dm)) and np.all(dm >= 0)
+        assert np.array_equal(np.diag(dm), np.zeros(97))
+        assert np.array_equal(dm, dm.T)
+        assert dm[0, 1] == 0.0
+    # blocked results are block-size invariant (fixed-order cross term)
+    assert np.array_equal(pairwise_distances(pts, block_rows=7),
+                          pairwise_distances(pts, block_rows=97))
+
+
+def test_streamed_compute_ph_runs_order_free():
+    """The sparse Dory pipeline must never materialize the O(n^2) table."""
+    rng = np.random.default_rng(2)
+    pts = rng.normal(size=(150, 3))
+    filt = build_filtration_tiled(points=pts, tau_max=1.0,
+                                  tile_m=64, tile_n=64)
+    assert filt.dense_order is None
+    res = compute_ph(filtration=filt, maxdim=2)
+    assert filt.dense_order is None          # sparse path stayed order-free
+    ref = compute_ph(points=pts, tau_max=1.0, maxdim=2, sparse=True)
+    for dim in (0, 1, 2):
+        assert np.array_equal(res.diagrams[dim], ref.diagrams[dim])
+
+
+def test_compute_ph_tiled_backend_with_budget():
+    rng = np.random.default_rng(4)
+    pts = rng.normal(size=(220, 3))
+    res = compute_ph(points=pts, maxdim=1, backend="tiled",
+                     memory_budget_bytes=120_000, tile_m=100, tile_n=100)
+    assert "tau_max_estimated" in res.stats
+    tau = res.stats["tau_max_estimated"]
+    ref = compute_ph(points=pts, tau_max=tau, maxdim=1)
+    for dim in (0, 1):
+        assert np.array_equal(res.diagrams[dim], ref.diagrams[dim])
+    assert res.stats["base_memory_bytes"] <= 1.15 * 120_000
+    with pytest.raises(ValueError):
+        compute_ph(points=pts, backend="no-such-backend")
+
+
+def test_harvest_edges_stats_account():
+    rng = np.random.default_rng(9)
+    pts = rng.normal(size=(300, 3))
+    stats = TileStats()
+    iu, ju, lens = harvest_edges(points=pts, tau_max=0.8,
+                                 tile_m=64, tile_n=64, backend="numpy",
+                                 stats=stats)
+    assert stats.n == 300 and stats.n_e == len(lens)
+    assert stats.harvest_bytes == iu.nbytes + ju.nbytes + lens.nbytes
+    # merge accounting is the transient worst case, not just the final arrays
+    assert stats.merge_peak_bytes >= stats.harvest_bytes + 2 * iu.nbytes
+    # one f64 tile + two bool masks, never O(n^2)
+    assert 0 < stats.peak_tile_bytes <= 64 * 64 * (8 + 1 + 1)
+    assert stats.peak_extra_bytes() < 300 * 300 * 8
+    assert np.all(np.diff(lens) >= 0)        # globally sorted merge
+
+
+def test_clearing_filter_matches_set_semantics():
+    ids = np.array([9, 4, 7, 2, 4, 0], dtype=np.int64)
+    cleared = {4, 0}
+    out = clearing_filter(ids, cleared)
+    assert out.tolist() == [9, 7, 2]
+    assert clearing_filter(ids, None).tolist() == ids.tolist()
+    assert clearing_filter(ids, np.array([], dtype=np.int64)).tolist() \
+        == ids.tolist()
+    assert clearing_filter(np.zeros(0, dtype=np.int64), cleared).size == 0
+    # array and set forms agree
+    assert np.array_equal(out, clearing_filter(ids, np.array([4, 0])))
+
+
+def test_h2_columns_vectorized_matches_reference():
+    rng = np.random.default_rng(6)
+    pts = rng.normal(size=(40, 3))
+    filt = bf(points=pts, tau_max=1.5)
+    adapter = make_h1_adapter(filt, sparse=True)
+    cols1 = np.arange(filt.n_e - 1, -1, -1, dtype=np.int64)
+    res1 = reduce_dimension(adapter, cols1, cleared=None)
+    got = h2_columns(filt, res1.pivot_lows, sparse=True)
+
+    # reference: the seed's per-int loop implementation
+    from repro.core import coboundary as cb
+    cleared = set(int(k) for k in res1.pivot_lows)
+    ref = []
+    for s in range(0, filt.n_e, 2048):
+        ids = np.arange(filt.n_e - 1, -1, -1, dtype=np.int64)[s:s + 2048]
+        for keys in cb.case1_triangles_of_edges(filt, ids, sparse=True):
+            for k in keys[::-1]:
+                if int(k) not in cleared:
+                    ref.append(int(k))
+    assert got.tolist() == ref
