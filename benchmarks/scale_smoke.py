@@ -4,6 +4,8 @@ Small enough for a CI runner, real enough to populate the perf trajectory:
 streams a torus4 cloud through the tiled builder under a byte budget, runs
 ``compute_ph`` on the resulting order-free filtration, and writes one JSON
 record (n, n_e, tau, peak-RSS estimate, wall times, memory accounts).
+``--devices N`` shards the harvest (mesh or host-partitioned) and adds the
+per-device fields.  Field-by-field reference: docs/benchmarks.md.
 
     PYTHONPATH=src python -m benchmarks.scale_smoke --n 3000 --out BENCH_scale.json
 """
@@ -22,24 +24,45 @@ def peak_rss_bytes() -> int:
     return int(rss) * (1 if sys.platform == "darwin" else 1024)
 
 
-def run(n: int, budget_mb: float, tile: int, maxdim: int, seed: int) -> dict:
+def run(n: int, budget_mb: float, tile: int, maxdim: int, seed: int,
+        devices: int = 1) -> dict:
     import numpy as np
 
     from repro.core import compute_ph
     from repro.data import pointclouds as pc
-    from repro.scale import build_filtration_tiled, estimate_tau_max
+    from repro.scale import (build_filtration_sharded, build_filtration_tiled,
+                             estimate_tau_max)
 
     budget = int(budget_mb * 2**20)
     pts = pc.clifford_torus(n, seed=seed)
 
     t0 = time.perf_counter()
-    tau = estimate_tau_max(pts, budget, seed=seed)
+    tau = estimate_tau_max(pts, budget, seed=seed, n_shards=devices,
+                           tile_m=tile, tile_n=tile)
     t_budget = time.perf_counter() - t0
 
+    shard_mode = None
     t0 = time.perf_counter()
-    filt, stats = build_filtration_tiled(points=pts, tau_max=tau,
-                                         tile_m=tile, tile_n=tile,
-                                         return_stats=True)
+    if devices > 1:
+        # real (data=N,) mesh when the process has the devices (CI's
+        # 4-virtual-device job), host-partitioned shards otherwise — the
+        # tile split, merge, and per-device accounting are identical
+        import jax
+        mesh = None
+        if len(jax.devices()) >= devices:
+            from repro.launch.mesh import make_data_mesh
+            mesh = make_data_mesh(devices)
+            shard_mode = "mesh"
+        else:
+            shard_mode = "host"
+        filt, stats = build_filtration_sharded(
+            points=pts, tau_max=tau, tile_m=tile, tile_n=tile, mesh=mesh,
+            n_shards=None if mesh is not None else devices,
+            return_stats=True)
+    else:
+        filt, stats = build_filtration_tiled(points=pts, tau_max=tau,
+                                             tile_m=tile, tile_n=tile,
+                                             return_stats=True)
     t_filtration = time.perf_counter() - t0
 
     t0 = time.perf_counter()
@@ -67,8 +90,21 @@ def run(n: int, budget_mb: float, tile: int, maxdim: int, seed: int) -> dict:
         "t_ph_s": round(t_ph, 4),
         "n_pairs": {str(d): int(len(pd)) for d, pd in res.diagrams.items()},
     }
+    if devices > 1:
+        record.update({
+            "n_shards": int(stats.n_shards),
+            "shard_mode": shard_mode,
+            "gather_bytes": int(stats.gather_bytes),
+            "shard_peak_harvest_bytes": int(stats.shard_peak_harvest_bytes),
+            "per_device_peak_bytes": int(stats.per_device_peak_bytes()),
+            "per_device_base_bytes": int(stats.per_device_base_bytes()),
+        })
     # the whole point: the streamed build must fit the account it was given
-    assert record["base_memory_bytes"] <= 1.2 * budget, record
+    # (per device when sharded — every device duplicates the 3n vertex words
+    # but holds only its edge share)
+    fit = record["per_device_base_bytes"] if devices > 1 \
+        else record["base_memory_bytes"]
+    assert fit <= 1.2 * budget, record
     assert record["peak_tile_bytes"] < record["dense_path_bytes"], record
     return record
 
@@ -80,10 +116,14 @@ def main() -> None:
     ap.add_argument("--tile", type=int, default=1024)
     ap.add_argument("--maxdim", type=int, default=1)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--devices", type=int, default=1,
+                    help="shard the harvest over N devices (a real mesh "
+                         "when available, host-partitioned otherwise)")
     ap.add_argument("--out", type=str, default="BENCH_scale.json")
     args = ap.parse_args()
 
-    record = run(args.n, args.budget_mb, args.tile, args.maxdim, args.seed)
+    record = run(args.n, args.budget_mb, args.tile, args.maxdim, args.seed,
+                 devices=args.devices)
     with open(args.out, "w") as f:
         json.dump(record, f, indent=2, sort_keys=True)
         f.write("\n")

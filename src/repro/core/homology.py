@@ -63,7 +63,8 @@ def make_h2_adapter(filt: Filtration, sparse: bool = True) -> DimensionAdapter:
 
 
 def h2_columns(filt: Filtration, h1_pivots: np.ndarray,
-               sparse: bool = True) -> np.ndarray:
+               sparse: bool = True,
+               memory_budget_bytes: Optional[int] = None) -> np.ndarray:
     """Triangle columns for H2* in decreasing F2 order, with clearing.
 
     Triangles are grouped by diameter edge (descending), ks descending within
@@ -71,11 +72,32 @@ def h2_columns(filt: Filtration, h1_pivots: np.ndarray,
     pivots (deaths) are cleared — one ``np.isin`` per batch rather than a
     per-triangle Python set probe, so column assembly no longer dominates at
     large ``n_e``.
+
+    Candidate enumeration is budget-aware (the first bite at a budgeted
+    reduction phase): edges that cannot own a case-1 triangle (an endpoint
+    of degree < 2 has no common neighbor) are dropped up front with one
+    vectorized degree gather instead of a per-edge neighborhood walk, and
+    with ``memory_budget_bytes`` the per-batch enumeration transient is
+    capped by sizing the edge batch to the budget rather than the fixed
+    2048.  The transient is ``<= batch * max_deg`` *slots*, but each slot
+    costs well more than one key: ``case1_triangles_of_edges`` materializes
+    three int64 gather arrays plus a bool mask plus the packed keys
+    (~40 B/slot budgeted below).  Neither knob changes the output — both
+    only bound how much is materialized at once.
     """
     pivots = np.asarray(h1_pivots, dtype=np.int64)
     chunks = []
     edge_ids = np.arange(filt.n_e - 1, -1, -1, dtype=np.int64)
+    deg = filt.degree.astype(np.int64)
+    can_own = (deg[filt.edges[edge_ids, 0]] > 1) \
+        & (deg[filt.edges[edge_ids, 1]] > 1)
+    edge_ids = edge_ids[can_own]
     batch = 2048
+    if memory_budget_bytes is not None:
+        # v/oa/ob int64 gathers (24) + ok mask (1) + packed keys out (8),
+        # rounded up — per (edge, neighbor) slot of the enumeration scratch
+        per_edge = 40 * max(1, int(filt.max_deg))
+        batch = int(np.clip(memory_budget_bytes // per_edge, 64, 2048))
     for s in range(0, len(edge_ids), batch):
         ids = edge_ids[s:s + batch]
         groups = cb.case1_triangles_of_edges(filt, ids, sparse=sparse)
@@ -117,6 +139,7 @@ def compute_ph(
     memory_budget_bytes: Optional[int] = None,
     tile_m: int = 2048,
     tile_n: int = 2048,
+    mesh=None,
 ) -> PHResult:
     """Persistent homology up to ``maxdim`` (<= 2), Dory pipeline.
 
@@ -128,26 +151,51 @@ def compute_ph(
     engine: "single" (1-thread analog) or "batch" (serial-parallel, §4.4).
     backend: "dense" materializes the (n, n) distance matrix (seed behavior);
     "tiled" streams it through ``repro.scale`` in (tile_m, tile_n) blocks —
-    peak filtration memory O(tile + n + n_e), the million-point path.  With
-    ``memory_budget_bytes`` and no finite ``tau_max``, the threshold is
-    auto-picked so the paper's ``(3n + 12 n_e) * 4`` account fits the budget.
+    peak filtration memory O(tile + n + n_e), the million-point path.
+    mesh: with ``backend="tiled"``, a jax mesh with a ``data`` axis shards
+    the tile harvest across its devices (``repro.scale.shard``) — output is
+    bit-identical to the serial tiled and dense builds for every device
+    count, and ``memory_budget_bytes`` is then interpreted *per device*
+    (vertex-array duplication + round gather transient included).
+    With ``memory_budget_bytes`` and no finite ``tau_max``, the threshold is
+    auto-picked so the paper's ``(3n + 12 n_e) * 4`` account fits the
+    budget; the same budget also caps the H2* candidate-enumeration
+    transient and spills explicit ``R^⊥`` columns to implicit ``V^⊥``
+    storage once the reduction store exceeds it.
     """
     stats: Dict[str, float] = {}
+    if mesh is not None and (filtration is not None or backend != "tiled"):
+        raise ValueError("mesh sharding requires backend='tiled' and no "
+                         "prebuilt filtration")
     t0 = time.perf_counter()
     if filtration is not None:
         filt = filtration
     elif backend == "tiled":
-        from ..scale import build_filtration_tiled, estimate_tau_max
+        from ..scale import (build_filtration_sharded, build_filtration_tiled,
+                             estimate_tau_max, shard_of_mesh)
 
+        n_shards = shard_of_mesh(mesh)[1] if mesh is not None else 1
         if memory_budget_bytes is not None and not np.isfinite(tau_max):
             if points is None:
                 raise ValueError(
                     "memory_budget_bytes needs points to estimate tau_max")
-            tau_max = estimate_tau_max(points, memory_budget_bytes)
+            tau_max = estimate_tau_max(points, memory_budget_bytes,
+                                       n_shards=n_shards,
+                                       tile_m=tile_m, tile_n=tile_n)
             stats["tau_max_estimated"] = float(tau_max)
-        filt = build_filtration_tiled(points=points, dists=dists,
-                                      tau_max=tau_max,
-                                      tile_m=tile_m, tile_n=tile_n)
+        if mesh is not None:
+            filt, tile_stats = build_filtration_sharded(
+                points=points, dists=dists, tau_max=tau_max,
+                tile_m=tile_m, tile_n=tile_n, mesh=mesh, return_stats=True)
+            stats["n_shards"] = float(tile_stats.n_shards)
+            stats["per_device_peak_bytes"] = float(
+                tile_stats.per_device_peak_bytes())
+            stats["per_device_base_bytes"] = float(
+                tile_stats.per_device_base_bytes())
+        else:
+            filt = build_filtration_tiled(points=points, dists=dists,
+                                          tau_max=tau_max,
+                                          tile_m=tile_m, tile_n=tile_n)
     elif backend == "dense":
         filt = build_filtration(points=points, dists=dists, tau_max=tau_max)
     else:
@@ -166,7 +214,9 @@ def compute_ph(
                                             cleared=cleared,
                                             batch_size=batch_size)
     else:
-        _reduce = reduce_dimension
+        def _reduce(adapter, cols, mode=mode, cleared=None):
+            return reduce_dimension(adapter, cols, mode=mode, cleared=cleared,
+                                    store_budget_bytes=memory_budget_bytes)
 
     diagrams: Dict[int, np.ndarray] = {}
 
@@ -190,7 +240,8 @@ def compute_ph(
     if maxdim >= 2:
         t0 = time.perf_counter()
         adapter2 = make_h2_adapter(filt, sparse=sparse)
-        cols2 = h2_columns(filt, res1.pivot_lows, sparse=sparse)
+        cols2 = h2_columns(filt, res1.pivot_lows, sparse=sparse,
+                           memory_budget_bytes=memory_budget_bytes)
         res2 = _reduce(adapter2, cols2, mode=mode)
         diagrams[2] = res2.diagram()
         stats["t_h2"] = time.perf_counter() - t0

@@ -92,16 +92,41 @@ class ReductionResult:
 
 
 class PivotStore:
-    """R^⊥/V^⊥ storage with trivial pairs excluded (paper §4.3.1, §4.3.5)."""
+    """R^⊥/V^⊥ storage with trivial pairs excluded (paper §4.3.1, §4.3.5).
 
-    def __init__(self, adapter: DimensionAdapter, mode: str):
+    ``store_budget_bytes`` makes the explicit store *budgeted*: once the
+    stored bytes would cross the budget, further columns are committed in
+    implicit form (V^⊥ generator lists, re-materialized on lookup) instead —
+    memory stays bounded by the budget plus one column, at the price of
+    re-enumerating coboundaries when a spilled column is looked up.  The
+    reduction's output is unchanged: both representations reproduce the
+    identical ``R^⊥`` keys.  Per-column representation is tracked in
+    ``col_modes`` so the two forms coexist in one table.
+
+    Mixed mode needs one extra invariant: a spilled column's stored V must
+    be a *complete* δ-basis expansion, which requires the expansions of the
+    explicit columns it absorbed too (``R(o) = δo ⊕ ⊕_{g∈V(o)} δg`` — an
+    explicit ``R`` array alone cannot be expanded after the fact).  So
+    whenever spilling is possible, gens are tracked for explicit commits as
+    well (``gens_lists``, counted against the budget); the pure explicit
+    path stores nothing extra.
+    """
+
+    def __init__(self, adapter: DimensionAdapter, mode: str,
+                 store_budget_bytes: Optional[int] = None):
         assert mode in ("explicit", "implicit")
         self.adapter = adapter
         self.mode = mode
+        self.store_budget_bytes = store_budget_bytes
+        self.track_gens = (mode == "implicit"
+                           or store_budget_bytes is not None)
         self.low_to_idx: Dict[int, int] = {}
         self.columns: List[np.ndarray] = []   # explicit: R keys; implicit: V gens
+        self.gens_lists: List[Optional[np.ndarray]] = []  # δ-expansions
         self.col_ids: List[int] = []
+        self.col_modes: List[str] = []
         self.bytes_stored = 0
+        self.n_spilled = 0
 
     def lookup_addend(self, low: int, self_id: int) -> Optional[np.ndarray]:
         """Column to add into r given its current low; None if low is fresh.
@@ -118,7 +143,7 @@ class PivotStore:
         idx = self.low_to_idx.get(low)
         if idx is None:
             return None
-        if self.mode == "explicit":
+        if self.col_modes[idx] == "explicit":
             return self.columns[idx]
         # implicit: re-materialize R(e') = ⊕_{e'' in V(e') ∪ {e'}} δe''.
         gens = np.concatenate([self.columns[idx],
@@ -130,13 +155,26 @@ class PivotStore:
                trivial: bool) -> None:
         if trivial:
             return  # never stored (paper §4.3.5)
+        mode = self.mode
+        if (mode == "explicit" and self.store_budget_bytes is not None
+                and self.bytes_stored + r.nbytes > self.store_budget_bytes):
+            mode = "implicit"       # budget spill: keep V gens, drop R keys
+            self.n_spilled += 1
         self.low_to_idx[low] = len(self.columns)
         self.col_ids.append(col_id)
-        if self.mode == "explicit":
+        self.col_modes.append(mode)
+        if mode == "explicit":
             self.columns.append(r)
             self.bytes_stored += r.nbytes
+            # keep the δ-expansion too when spilling is possible: a later
+            # spilled column that absorbed this one needs it (see class
+            # docstring); counted against the budget for honesty
+            self.gens_lists.append(gens if self.track_gens else None)
+            if self.track_gens:
+                self.bytes_stored += gens.nbytes
         else:
             self.columns.append(gens)
+            self.gens_lists.append(gens)
             self.bytes_stored += gens.nbytes
 
 
@@ -165,13 +203,17 @@ def reduce_dimension(
     mode: str = "explicit",
     cleared=None,
     return_store: bool = False,
+    store_budget_bytes: Optional[int] = None,
 ):
     """Single-column (paper 1-thread) cohomology reduction.
 
     ``column_ids`` must be in *decreasing* filtration order (``F^-1``), with
     clearing already applied or supplied via ``cleared`` (set or int array).
+    ``store_budget_bytes`` bounds the explicit pivot store: columns past the
+    budget are kept implicitly (V^⊥) and re-materialized on lookup — same
+    diagram, bounded memory (see :class:`PivotStore`).
     """
-    store = PivotStore(adapter, mode)
+    store = PivotStore(adapter, mode, store_budget_bytes=store_budget_bytes)
     pairs: List[tuple] = []
     essentials: List[float] = []
     n_reductions = 0
@@ -226,6 +268,7 @@ def reduce_dimension(
             "n_essential": float(len(essentials)),
             "stored_bytes": float(store.bytes_stored),
             "n_stored_columns": float(len(store.columns)),
+            "n_spilled": float(store.n_spilled),
         },
     )
     if return_store:
@@ -242,8 +285,14 @@ def self_owner_of(store: PivotStore, adapter: DimensionAdapter, low: int) -> int
 
 
 def store_gens(store: PivotStore, low: int) -> np.ndarray:
-    """V(owner) for implicit bookkeeping (empty for trivial/explicit owners)."""
+    """δ-expansion V(owner) for implicit bookkeeping.
+
+    Empty for trivial owners (R = δ·owner) and for explicit owners of a
+    pure explicit run (nothing tracked, nothing ever needs it); the stored
+    expansion otherwise — including explicit owners of a budgeted run,
+    whose expansions later spilled columns depend on.
+    """
     idx = store.low_to_idx.get(low)
-    if idx is not None and store.mode == "implicit":
-        return store.columns[idx]
+    if idx is not None and store.gens_lists[idx] is not None:
+        return store.gens_lists[idx]
     return np.zeros(0, dtype=np.int64)

@@ -57,8 +57,8 @@ def _owner_id(store: PivotStore, adapter: DimensionAdapter, low: int) -> int:
 
 def _owner_gens(store: PivotStore, low: int) -> np.ndarray:
     idx = store.low_to_idx.get(low)
-    if idx is not None and store.mode == "implicit":
-        return store.columns[idx]
+    if idx is not None and store.gens_lists[idx] is not None:
+        return store.gens_lists[idx]
     return np.zeros(0, dtype=np.int64)
 
 

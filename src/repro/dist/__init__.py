@@ -11,11 +11,11 @@ from .compression import compressed_psum_grads, dequantize_int8, ef_compress
 from .sharding import (activation_rules, batch_specs, bind_activation_rules,
                        bound_axis, bound_mesh, bound_rules, cache_specs,
                        constrain, shard_params, shardings_from_specs,
-                       spec_for_param, tree_path_str)
+                       spec_for_param, tile_specs, tree_path_str)
 
 __all__ = [
     "activation_rules", "batch_specs", "bind_activation_rules", "bound_axis",
     "bound_mesh", "bound_rules", "cache_specs", "compressed_psum_grads",
     "constrain", "dequantize_int8", "ef_compress", "shard_params",
-    "shardings_from_specs", "spec_for_param", "tree_path_str",
+    "shardings_from_specs", "spec_for_param", "tile_specs", "tree_path_str",
 ]

@@ -27,6 +27,11 @@ Decode is different from train: the KV cache is sequence-sharded over
 serving batch cannot cover the data axis the whole cache goes seq-parallel
 over (data, model) — the batch-size-aware fallback ``activation_rules``
 implements.
+
+The PH half of the repo consumes the same mesh vocabulary: ``tile_specs``
+maps the ``scale.shard`` tile-harvest round (one distance tile per device)
+onto the data axis, so filtration construction and LM training agree on
+what ``data`` means.
 """
 from __future__ import annotations
 
@@ -40,7 +45,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 __all__ = [
     "activation_rules", "batch_specs", "bind_activation_rules", "bound_axis",
     "bound_mesh", "bound_rules", "cache_specs", "constrain", "shard_params",
-    "shardings_from_specs", "spec_for_param", "tree_path_str",
+    "shardings_from_specs", "spec_for_param", "tile_specs", "tree_path_str",
 ]
 
 
@@ -240,6 +245,29 @@ def batch_specs(shapes: Dict[str, Any], mesh) -> Dict[str, P]:
         return P(*spec)
 
     return {k: one(k, v) for k, v in shapes.items()}
+
+
+def tile_specs(mesh) -> Tuple[Tuple[P, P], P, str]:
+    """Specs for the sharded tile-harvest ``shard_map`` (``scale.shard``).
+
+    One round stacks each device's ``(tile_m, d)`` / ``(tile_n, d)`` point
+    blocks on a leading axis of size ``data``; that leading axis shards over
+    the innermost data axis and everything else — including any ``model`` or
+    ``pod`` axis present — sees the work replicated (tile harvesting is pure
+    data parallelism; TP axes contribute nothing and must not split a tile).
+
+    Returns ``(in_specs, out_specs, axis_name)`` ready to pass to
+    ``jax.shard_map``: ``in_specs`` for the (x-blocks, y-blocks) pair,
+    ``out_specs`` for the stacked ``(data, tile_m, tile_n)`` output.
+    """
+    _, data_axes = _mesh_axes(mesh)
+    if not data_axes:
+        raise ValueError(
+            f"mesh axes {tuple(getattr(mesh, 'axis_names', ()))} have no "
+            "data axis to shard the tile grid over")
+    ax = data_axes[-1]          # 'data' when present, else 'pod'
+    spec = P(ax)
+    return (spec, spec), spec, ax
 
 
 def cache_specs(layers, mesh, seq_len: int, batch: int):

@@ -36,3 +36,20 @@ def make_mesh(shape, axes) -> Mesh:
     devices = jax.devices()
     assert len(devices) >= n, (len(devices), shape)
     return Mesh(np.array(devices[:n]).reshape(shape), axes)
+
+
+def make_data_mesh(n_devices: int | None = None) -> Mesh:
+    """1-D ``(data,)`` mesh over the first ``n_devices`` (default: all).
+
+    The mesh shape ``repro.scale.shard`` and ``compute_ph(...,
+    backend="tiled", mesh=...)`` expect for sharding the tile harvest; on a
+    CPU host, virtual devices come from
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` (set before jax
+    initializes — the 4-device CI job does this).
+    """
+    devices = jax.devices()
+    n = len(devices) if n_devices is None else int(n_devices)
+    if len(devices) < n:
+        raise RuntimeError(f"need {n} devices for a (data={n},) mesh, "
+                           f"have {len(devices)}")
+    return Mesh(np.array(devices[:n]), ("data",))

@@ -1,22 +1,32 @@
 """repro.scale: streaming tiled filtration for million-point PH (paper §5-6).
 
 Builds the sparse Dory :class:`~repro.core.filtration.Filtration` without any
-``O(n^2)`` allocation: tiled distance harvesting (``tiles``), byte-budget
+``O(n^2)`` allocation: tiled distance harvesting (``tiles``), multi-device
+tile sharding over the ``data`` mesh axis (``shard``), byte-budget
 ``tau_max`` estimation + maxmin landmarks (``budget``), and sparse COO
 distance input (``sparse_input``).  Entry via ``build_filtration_tiled`` /
-``build_filtration_coo`` directly, or ``compute_ph(..., backend="tiled",
-memory_budget_bytes=...)``.
+``build_filtration_sharded`` / ``build_filtration_coo`` directly, or
+``compute_ph(..., backend="tiled", memory_budget_bytes=..., mesh=...)``.
+
+See ``docs/architecture.md`` for the end-to-end pipeline walk and
+``docs/api.md`` for the reference of this surface.
 """
 from .budget import (edge_budget, estimate_tau_max, landmark_points,
-                     maxmin_landmarks, sample_pair_lengths)
+                     maxmin_landmarks, sample_pair_lengths,
+                     sharded_edge_budget, tile_transient_bytes)
+from .shard import (build_filtration_sharded, harvest_edges_sharded,
+                    partition_tiles, shard_of_mesh)
 from .sparse_input import (build_filtration_coo, contacts_to_distances,
                            coo_symmetrize)
 from .tiles import (TileStats, build_filtration_tiled, harvest_edges,
-                    iter_tile_edges)
+                    iter_tile_edges, merge_edge_chunks, tile_grid)
 
 __all__ = [
     "TileStats", "build_filtration_tiled", "harvest_edges", "iter_tile_edges",
+    "merge_edge_chunks", "tile_grid",
+    "build_filtration_sharded", "harvest_edges_sharded", "partition_tiles",
+    "shard_of_mesh",
     "edge_budget", "estimate_tau_max", "maxmin_landmarks", "landmark_points",
-    "sample_pair_lengths",
+    "sample_pair_lengths", "sharded_edge_budget", "tile_transient_bytes",
     "build_filtration_coo", "contacts_to_distances", "coo_symmetrize",
 ]

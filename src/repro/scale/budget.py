@@ -25,6 +25,49 @@ def edge_budget(n: int, memory_budget_bytes: int) -> int:
     return max(0, (int(memory_budget_bytes) // 4 - 3 * n) // 12)
 
 
+def tile_transient_bytes(tile_m: int, tile_n: int, n_shards: int = 1,
+                         backend: str = "numpy", d: int = 8) -> int:
+    """Per-device transient of the tiled harvest, outside the paper account.
+
+    The resident tile scratch (f64 lengths + threshold mask + worst-case
+    diagonal mask on the numpy path; f32 candidates + masks on the pallas
+    path) plus, when sharded over a mesh, the round's stacked f32 gather —
+    ``n_shards`` tiles of f32 output and the two stacked ``(tile, d)`` f32
+    input blocks land on the host at once (``TileStats.gather_bytes``
+    measures the same quantity a posteriori).  ``d`` is the point
+    dimension; pass the real one (``estimate_tau_max`` does) or the bound
+    under-reserves for wide clouds.
+    """
+    tile = int(tile_m) * int(tile_n)
+    resident = tile * ((8 if backend == "numpy" else 4) + 1 + 1)
+    gather = 0
+    if n_shards > 1:
+        gather = n_shards * (tile * 4 + (tile_m + tile_n) * int(d) * 4)
+    return resident + gather
+
+
+def sharded_edge_budget(n: int, memory_budget_bytes: int, n_shards: int,
+                        tile_m: int, tile_n: int,
+                        backend: str = "numpy", d: int = 8) -> int:
+    """Largest *global* ``n_e`` whose per-device footprint fits the budget.
+
+    ``memory_budget_bytes`` is interpreted **per device**: every device
+    duplicates the ``3n`` vertex arrays, holds ``~n_e / n_shards`` of the
+    edge arrays, and additionally pays the harvest transient
+    (:func:`tile_transient_bytes`, including the round gather).  Inverting
+    the per-device account and scaling the edge share back up gives the
+    global edge count the fleet affords.
+    """
+    avail = int(memory_budget_bytes) - tile_transient_bytes(
+        tile_m, tile_n, n_shards, backend, d=d)
+    if avail <= 0:
+        raise ValueError(
+            f"memory_budget_bytes={memory_budget_bytes} per device cannot "
+            f"even hold the ({tile_m}, {tile_n}) tile transient for "
+            f"n_shards={n_shards}")
+    return n_shards * edge_budget(n, avail)
+
+
 def sample_pair_lengths(points: np.ndarray, n_samples: int = 200_000,
                         seed: int = 0) -> np.ndarray:
     """Exact lengths of ``n_samples`` uniform random (i < j) pairs."""
@@ -48,6 +91,10 @@ def estimate_tau_max(
     n_samples: int = 200_000,
     seed: int = 0,
     safety: float = 0.9,
+    n_shards: int = 1,
+    tile_m: Optional[int] = None,
+    tile_n: Optional[int] = None,
+    backend: str = "numpy",
 ) -> float:
     """Pick ``tau_max`` so the expected ``n_e`` fits the byte budget.
 
@@ -55,10 +102,26 @@ def estimate_tau_max(
     ``n_e(tau) ~= q(tau) * n(n-1)/2``; we take the quantile at the budgeted
     edge fraction, shrunk by ``safety`` to absorb sampling error.  Returns
     ``inf`` when the budget covers the full clique.
+
+    With ``n_shards > 1`` (a mesh-sharded build) the budget is interpreted
+    **per device**: the ``3n`` vertex arrays are duplicated on every device
+    and the per-round gather transient is charged before the edge account is
+    inverted (:func:`sharded_edge_budget`) — the serial form assumed one
+    resident tile globally, which under-reserved on every device of a mesh.
+    ``tile_m``/``tile_n`` size that transient (required when sharded).
     """
-    n = int(np.asarray(points).shape[0])
+    points = np.asarray(points)
+    n = int(points.shape[0])
     total_pairs = n * (n - 1) // 2
-    max_edges = edge_budget(n, memory_budget_bytes)
+    if n_shards > 1:
+        if tile_m is None or tile_n is None:
+            raise ValueError("sharded budgets need tile_m and tile_n to "
+                             "account the per-device tile + gather transient")
+        max_edges = sharded_edge_budget(n, memory_budget_bytes, n_shards,
+                                        tile_m, tile_n, backend=backend,
+                                        d=int(points.shape[1]))
+    else:
+        max_edges = edge_budget(n, memory_budget_bytes)
     if max_edges <= 0:
         raise ValueError(
             f"memory_budget_bytes={memory_budget_bytes} cannot hold even the "

@@ -7,6 +7,8 @@ absent from the COO set are treated as infinitely far (no edge), exactly like
 a dense matrix whose missing entries exceed ``tau_max``, so
 ``build_filtration_coo`` is bit-identical to a dense ``dists=`` call on the
 materialized matrix (asserted in tests) while never allocating ``O(n^2)``.
+Workload walk-through and field reference: ``docs/architecture.md`` and
+``docs/api.md``.
 """
 from __future__ import annotations
 

@@ -38,7 +38,14 @@ DEFAULT_TILE = 2048
 
 @dataclasses.dataclass
 class TileStats:
-    """Accounting for one streamed build (benchmarks assert against this)."""
+    """Accounting for one streamed build (benchmarks assert against this).
+
+    For sharded builds (``repro.scale.shard``) the per-tile fields describe
+    *one device*: ``peak_tile_bytes`` is the largest tile resident on any
+    single device, ``gather_bytes`` the stacked per-round transfer transient,
+    and ``shard_peak_harvest_bytes`` the largest per-device COO fragment set
+    held before the host merge.  ``n_shards == 1`` for serial builds.
+    """
 
     n: int = 0
     n_e: int = 0
@@ -47,16 +54,40 @@ class TileStats:
     backend: str = "numpy"
     tiles_visited: int = 0
     candidate_pairs: int = 0      # pallas path: f32 candidates refined in f64
-    peak_tile_bytes: int = 0      # largest per-tile scratch
+    peak_tile_bytes: int = 0      # largest per-tile scratch (per device)
     harvest_bytes: int = 0        # final sorted COO triplet arrays
     merge_peak_bytes: int = 0     # worst transient during concat + lexsort
     base_memory_bytes: int = 0    # paper (3n + 12 n_e) * 4 for the result
+    n_shards: int = 1             # devices/shards the tile grid was split over
+    mesh_axis: str = ""           # mesh axis name for device-sharded builds
+    gather_bytes: int = 0         # sharded: stacked f32 round in/out transient
+    shard_peak_harvest_bytes: int = 0   # largest per-shard fragment set
 
     def peak_extra_bytes(self) -> int:
         """Peak transient memory of the build: one tile + the merge worst case
         (chunks + concat copy, then sort index + permuted copies)."""
         return self.peak_tile_bytes + max(self.merge_peak_bytes,
                                           self.harvest_bytes)
+
+    def per_device_base_bytes(self) -> int:
+        """Per-device share of the paper's ``(3n + 12 n_e) * 4`` account.
+
+        The ``3n`` vertex arrays are duplicated on every device; the
+        ``12 n_e`` edge arrays split ~evenly across shards (ceiling share).
+        """
+        shards = max(1, self.n_shards)
+        ne_share = -(-self.n_e // shards)
+        return (3 * self.n + 12 * ne_share) * 4
+
+    def per_device_peak_bytes(self) -> int:
+        """Peak per-device transient of a sharded harvest: the resident tile
+        scratch plus the round gather stack plus this device's un-merged COO
+        fragments.  ``scale.budget.tile_transient_bytes`` a-priori bounds
+        the first two terms only (``peak_tile_bytes + gather_bytes``); the
+        fragment term rides the edge share of the
+        :meth:`per_device_base_bytes` account instead."""
+        return (self.peak_tile_bytes + self.gather_bytes
+                + self.shard_peak_harvest_bytes)
 
 
 def _resolve_backend(backend: str) -> str:
@@ -83,6 +114,95 @@ def _f32_margin(sq_max: float, d: int) -> float:
     return 8.0 * (d + 4) * eps32 * max(sq_max, 1.0) * 4.0
 
 
+def tile_grid(n: int, tile_m: int, tile_n: int) -> list:
+    """Row-major list of upper-triangular tile origins ``(si, sj)``.
+
+    A tile is listed iff it intersects the strict upper triangle
+    (``si < min(sj + tile_n, n) - 1``); every unordered pair (i < j) lives in
+    exactly one listed tile — the one indexed by ``(i // tile_m,
+    j // tile_n)`` — so per-tile harvests are disjoint and their union is
+    exactly the dense path's thresholded upper triangle.
+    """
+    return [(si, sj)
+            for si in range(0, n, tile_m)
+            for sj in range(0, n, tile_n)
+            if si < min(sj + tile_n, n) - 1]
+
+
+def _upper_mask(si: int, ei: int, sj: int, ej: int) -> Optional[np.ndarray]:
+    """i<j mask for a diagonal-crossing tile; None when fully above (the
+    vast majority for large n, which then needs no mask at all)."""
+    if ei - 1 < sj:
+        return None
+    return np.arange(si, ei)[:, None] < np.arange(sj, ej)[None, :]
+
+
+def _harvest_masked_tile(lens_tile: np.ndarray, si: int, sj: int,
+                         tau_max: float, upper: Optional[np.ndarray],
+                         stats: Optional[TileStats]
+                         ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Threshold one exact-f64 length tile and emit its COO chunk."""
+    mask = lens_tile <= tau_max
+    if upper is not None:
+        mask &= upper
+    if stats is not None:
+        stats.peak_tile_bytes = max(
+            stats.peak_tile_bytes, lens_tile.nbytes + mask.nbytes
+            + (0 if upper is None else upper.nbytes))
+    ri, rj = np.nonzero(mask)
+    return si + ri, sj + rj, lens_tile[ri, rj]
+
+
+def _harvest_points_tile(points: np.ndarray, sq: np.ndarray,
+                         si: int, ei: int, sj: int, ej: int, tau_max: float,
+                         stats: Optional[TileStats]
+                         ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """numpy host path: exact f64 tile via the fixed-order kernels."""
+    d2 = block_sq_dists(points[si:ei], points[sj:ej], sq[si:ei], sq[sj:ej])
+    lens_tile = np.sqrt(d2, out=d2)
+    return _harvest_masked_tile(lens_tile, si, sj, tau_max,
+                                _upper_mask(si, ei, sj, ej), stats)
+
+
+def _refine_f32_tile(d2_32: np.ndarray, points: np.ndarray, sq: np.ndarray,
+                     si: int, ei: int, sj: int, ej: int,
+                     tau_max: float, thr32: np.float32,
+                     stats: Optional[TileStats]
+                     ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """f32 candidate filter + exact f64 re-measure for one tile.
+
+    ``d2_32`` is the tile's f32 squared distances (already cropped to the
+    real ``(ei - si, ej - sj)`` extent).  Candidates within the conservative
+    ``thr32`` margin are re-measured in f64 on the sparse candidate set, so
+    the output is bit-identical to the numpy tile regardless of which device
+    (or how many devices) produced ``d2_32``.
+    """
+    upper = _upper_mask(si, ei, sj, ej)
+    cand = d2_32 <= thr32
+    if upper is not None:
+        cand &= upper
+    if stats is not None:
+        stats.peak_tile_bytes = max(
+            stats.peak_tile_bytes, d2_32.nbytes + cand.nbytes
+            + (0 if upper is None else upper.nbytes))
+    ri, rj = np.nonzero(cand)
+    iu, ju = si + ri, sj + rj
+    lens = np.sqrt(pair_sq_dists(points, iu, ju, sq))
+    if stats is not None:
+        stats.candidate_pairs += int(iu.size)
+    keep = lens <= tau_max
+    return iu[keep], ju[keep], lens[keep]
+
+
+def _f32_threshold(points: np.ndarray, sq: np.ndarray,
+                   tau_max: float) -> np.float32:
+    """Margin-widened f32 candidate threshold for the whole cloud."""
+    n = points.shape[0]
+    margin = _f32_margin(float(sq.max()) if n else 1.0, points.shape[1])
+    return np.float32(tau_max * tau_max + margin) \
+        if np.isfinite(tau_max) else np.float32(np.inf)
+
+
 def iter_tile_edges(
     points: Optional[np.ndarray] = None,
     dists: Optional[np.ndarray] = None,
@@ -92,12 +212,16 @@ def iter_tile_edges(
     backend: str = "auto",
     interpret: Optional[bool] = None,
     stats: Optional[TileStats] = None,
+    tiles: Optional[list] = None,
 ) -> Iterator[Tuple[np.ndarray, np.ndarray, np.ndarray]]:
     """Yield COO edge chunks ``(iu, ju, lens)`` per tile, ``i < j`` only.
 
-    Every unordered pair (i < j) lives in exactly one tile — the one indexed
-    by ``(i // tile_m, j // tile_n)`` — so chunks are disjoint and their
-    union is exactly the dense path's thresholded upper triangle.
+    Tiles stream serially in :func:`tile_grid` order — or in the explicit
+    ``tiles`` list of ``(si, sj)`` origins, which is how ``scale.shard``
+    replays one shard's partition through this exact dispatch (keeping the
+    serial and sharded per-tile code paths literally the same).  Chunks are
+    disjoint and their union over a full grid is exactly the dense path's
+    thresholded upper triangle.
     """
     if (points is None) == (dists is None):
         raise ValueError("provide exactly one of points or dists")
@@ -119,72 +243,29 @@ def iter_tile_edges(
 
             from ..kernels.pairwise_dist import pairwise_sq_dists
             pts32 = jnp.asarray(points, dtype=jnp.float32)
-            margin = _f32_margin(float(sq.max()) if n else 1.0,
-                                 points.shape[1])
-            thr32 = np.float32(tau_max * tau_max + margin) \
-                if np.isfinite(tau_max) else np.float32(np.inf)
+            thr32 = _f32_threshold(points, sq, tau_max)
     if stats is not None:
         stats.n = n
 
-    for si in range(0, n, tile_m):
-        ei = min(si + tile_m, n)
-        for sj in range(0, n, tile_n):
-            ej = min(sj + tile_n, n)
-            if si >= ej - 1:
-                continue                      # tile strictly below diagonal
-            # tiles fully above the diagonal (the vast majority for large n)
-            # need no i<j mask at all
-            upper = None if ei - 1 < sj else \
-                (np.arange(si, ei)[:, None] < np.arange(sj, ej)[None, :])
-            upper_bytes = 0 if upper is None else upper.nbytes
-            if stats is not None:
-                stats.tiles_visited += 1
+    if tiles is None:
+        tiles = tile_grid(n, tile_m, tile_n)
+    for si, sj in tiles:
+        ei, ej = min(si + tile_m, n), min(sj + tile_n, n)
+        if stats is not None:
+            stats.tiles_visited += 1
 
-            if dists is not None:
-                lens_tile = np.asarray(dists[si:ei, sj:ej], dtype=np.float64)
-                mask = lens_tile <= tau_max
-                if upper is not None:
-                    mask &= upper
-                if stats is not None:
-                    stats.peak_tile_bytes = max(
-                        stats.peak_tile_bytes,
-                        lens_tile.nbytes + mask.nbytes + upper_bytes)
-                ri, rj = np.nonzero(mask)
-                yield si + ri, sj + rj, lens_tile[ri, rj]
-                continue
-
-            if backend == "pallas":
-                d2_32 = np.asarray(pairwise_sq_dists(
-                    pts32[si:ei], pts32[sj:ej], interpret=interpret))
-                cand = d2_32 <= thr32
-                if upper is not None:
-                    cand &= upper
-                if stats is not None:
-                    stats.peak_tile_bytes = max(
-                        stats.peak_tile_bytes,
-                        d2_32.nbytes + cand.nbytes + upper_bytes)
-                ri, rj = np.nonzero(cand)
-                iu, ju = si + ri, sj + rj
-                # exact f64 re-measure on the sparse candidate set
-                lens = np.sqrt(pair_sq_dists(points, iu, ju, sq))
-                if stats is not None:
-                    stats.candidate_pairs += int(iu.size)
-                keep = lens <= tau_max
-                yield iu[keep], ju[keep], lens[keep]
-                continue
-
-            d2 = block_sq_dists(points[si:ei], points[sj:ej],
-                                sq[si:ei], sq[sj:ej])
-            lens_tile = np.sqrt(d2, out=d2)
-            mask = lens_tile <= tau_max
-            if upper is not None:
-                mask &= upper
-            if stats is not None:
-                stats.peak_tile_bytes = max(
-                    stats.peak_tile_bytes,
-                    lens_tile.nbytes + mask.nbytes + upper_bytes)
-            ri, rj = np.nonzero(mask)
-            yield si + ri, sj + rj, lens_tile[ri, rj]
+        if dists is not None:
+            lens_tile = np.asarray(dists[si:ei, sj:ej], dtype=np.float64)
+            yield _harvest_masked_tile(lens_tile, si, sj, tau_max,
+                                       _upper_mask(si, ei, sj, ej), stats)
+        elif backend == "pallas":
+            d2_32 = np.asarray(pairwise_sq_dists(
+                pts32[si:ei], pts32[sj:ej], interpret=interpret))
+            yield _refine_f32_tile(d2_32, points, sq, si, ei, sj, ej,
+                                   tau_max, thr32, stats)
+        else:
+            yield _harvest_points_tile(points, sq, si, ei, sj, ej,
+                                       tau_max, stats)
 
 
 def harvest_edges(
@@ -199,15 +280,13 @@ def harvest_edges(
 ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
     """All permissible edges as one globally sorted COO list.
 
-    Chunks stream out of :func:`iter_tile_edges` and are merged with a single
-    ``(length, i, j)`` lexsort — the same canonical order the dense builder
-    uses, so downstream structures match bit for bit.  Chunk lists are
-    released as each concatenation lands so the merge's transient peak is
-    chunks + one concat copy, then sort index + permuted copies — recorded
-    honestly in ``TileStats.merge_peak_bytes``, not just the final arrays.
+    Chunks stream out of :func:`iter_tile_edges` and merge through
+    :func:`merge_edge_chunks` into the canonical ``(length, i, j)`` order —
+    the same the dense builder uses, so downstream structures match bit for
+    bit.  See :func:`repro.scale.shard.harvest_edges_sharded` for the
+    multi-device form.
     """
     ii, jj, ll = [], [], []
-    chunk_bytes = 0
     for iu, ju, lens in iter_tile_edges(points=points, dists=dists,
                                         tau_max=tau_max, tile_m=tile_m,
                                         tile_n=tile_n, backend=backend,
@@ -215,7 +294,23 @@ def harvest_edges(
         ii.append(iu.astype(np.int64))
         jj.append(ju.astype(np.int64))
         ll.append(lens)
-        chunk_bytes += ii[-1].nbytes + jj[-1].nbytes + ll[-1].nbytes
+    return merge_edge_chunks(ii, jj, ll, stats=stats)
+
+
+def merge_edge_chunks(
+    ii: list, jj: list, ll: list, stats: Optional[TileStats] = None,
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Merge per-tile COO chunk lists into the canonical sorted edge list.
+
+    The single ``(length, i, j)`` lexsort is a total order over pairs, so
+    the result is independent of chunk arrival order — serial tile streams
+    and sharded per-device fragments merge to identical bits.  Consumes the
+    input lists (chunks are released as each concatenation lands) so the
+    transient peak is chunks + one concat copy, then sort index + permuted
+    copies — recorded honestly in ``TileStats.merge_peak_bytes``.
+    """
+    chunk_bytes = sum(a.nbytes + b.nbytes + c.nbytes
+                      for a, b, c in zip(ii, jj, ll))
     iu = np.concatenate(ii) if ii else np.zeros(0, dtype=np.int64)
     ii.clear()
     ju = np.concatenate(jj) if jj else np.zeros(0, dtype=np.int64)

@@ -1,0 +1,48 @@
+"""Docs stay honest: dead-link + doctest checks on docs/*.md and README.
+
+Runs the same checks as ``tools/check_docs.py`` (the standalone CI entry)
+under pytest, so the tier-1 suite fails when a doc example or a relative
+link rots.  Each file is a separate parametrized case so a failure names
+the document.
+"""
+import importlib.util
+import os
+
+import pytest
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+_spec = importlib.util.spec_from_file_location(
+    "check_docs", os.path.join(_ROOT, "tools", "check_docs.py"))
+check_docs = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(check_docs)
+
+DOCS = check_docs.default_files(_ROOT)
+
+
+def test_docs_exist():
+    names = {os.path.basename(p) for p in DOCS}
+    assert {"architecture.md", "api.md", "benchmarks.md",
+            "README.md"} <= names
+
+
+@pytest.mark.parametrize("path", DOCS, ids=[os.path.relpath(p, _ROOT)
+                                            for p in DOCS])
+def test_no_dead_links(path):
+    assert check_docs.dead_links(path) == []
+
+
+@pytest.mark.parametrize("path", DOCS, ids=[os.path.relpath(p, _ROOT)
+                                            for p in DOCS])
+def test_doctests_pass(path):
+    failed, attempted = check_docs.run_doctests(path)
+    assert failed == 0, f"{failed}/{attempted} doctests failed in {path}"
+
+
+def test_docs_have_examples():
+    """The three scale docs must keep at least one runnable example each —
+    a doc with zero doctests can't rot, but it can't protect itself
+    either."""
+    for name in ("architecture.md", "api.md", "benchmarks.md"):
+        path = os.path.join(_ROOT, "docs", name)
+        _, attempted = check_docs.run_doctests(path)
+        assert attempted > 0, name

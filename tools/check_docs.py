@@ -1,0 +1,94 @@
+"""Docs rot check: dead relative links + doctest on ``>>>`` examples.
+
+Run from the repo root (CI does, with ``PYTHONPATH=src``):
+
+    PYTHONPATH=src python tools/check_docs.py [files...]
+
+Defaults to ``docs/*.md`` + ``README.md``.  Two checks per file:
+
+* **links** — every relative markdown link target (``[x](path)`` with no
+  scheme) must exist on disk relative to the linking file (anchors are
+  stripped; ``http(s)``/``mailto`` links are skipped — CI is offline);
+* **doctests** — ``doctest.testfile`` runs every ``>>>`` example in the
+  file in one shared namespace, so examples can build on each other.
+  Illustrative fenced blocks without ``>>>`` are ignored.
+
+``tests/test_docs.py`` runs the same functions under pytest so the tier-1
+suite protects the docs too; this script is the standalone CI entry.
+"""
+from __future__ import annotations
+
+import doctest
+import glob
+import os
+import re
+import sys
+
+# doctest examples import both ``repro`` (src layout) and ``benchmarks``
+# (repo root); make the script runnable from anywhere without env setup
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for _p in (_ROOT, os.path.join(_ROOT, "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
+
+# [text](target) — excludes images' leading ! from the text capture on
+# purpose (the target still gets checked) and ignores in-page #anchors
+_LINK_RE = re.compile(r"\[[^\]^]*\]\(([^)\s]+)\)")
+_SKIP_SCHEMES = ("http://", "https://", "mailto:", "#")
+
+DOCTEST_FLAGS = (doctest.ELLIPSIS | doctest.NORMALIZE_WHITESPACE
+                 | doctest.IGNORE_EXCEPTION_DETAIL)
+
+
+def default_files(root: str = ".") -> list:
+    docs = sorted(glob.glob(os.path.join(root, "docs", "*.md")))
+    readme = os.path.join(root, "README.md")
+    return docs + ([readme] if os.path.exists(readme) else [])
+
+
+def dead_links(path: str) -> list:
+    """Relative link targets in ``path`` that do not exist on disk."""
+    with open(path, encoding="utf-8") as f:
+        text = f.read()
+    base = os.path.dirname(os.path.abspath(path))
+    bad = []
+    for target in _LINK_RE.findall(text):
+        if target.startswith(_SKIP_SCHEMES):
+            continue
+        rel = target.split("#", 1)[0]
+        if not rel:
+            continue
+        if not os.path.exists(os.path.join(base, rel)):
+            bad.append(target)
+    return bad
+
+
+def run_doctests(path: str):
+    """(failed, attempted) for the ``>>>`` examples in ``path``."""
+    result = doctest.testfile(os.path.abspath(path), module_relative=False,
+                              optionflags=DOCTEST_FLAGS, verbose=False)
+    return result.failed, result.attempted
+
+
+def check(files: list) -> int:
+    status = 0
+    for path in files:
+        bad = dead_links(path)
+        if bad:
+            status = 1
+            for target in bad:
+                print(f"DEAD LINK {path}: {target}")
+        failed, attempted = run_doctests(path)
+        if failed:
+            status = 1
+        print(f"{path}: {attempted - failed}/{attempted} doctests ok, "
+              f"{len(bad)} dead links")
+    return status
+
+
+if __name__ == "__main__":
+    files = sys.argv[1:] or default_files()
+    if not files:
+        print("no docs found", file=sys.stderr)
+        sys.exit(1)
+    sys.exit(check(files))
