@@ -1,0 +1,114 @@
+"""CI benchmark for the reduction engines -> BENCH_reduce.json.
+
+Runs the same reduction-heavy smoke workload through every engine
+(``single`` / ``batch`` / ``packed``) in both storage modes and records
+reduction wall time plus reductions/sec, so the perf trajectory of the
+packed hot path is pinned per push.  The workload is the suite's
+``fractal`` regime (a self-similar random distance matrix, ``maxdim=2``) —
+the reduction-bound corner of Table 2, where column chains are deep and the
+engines differ the most; the geometric datasets are filtration-bound and
+land in ``BENCH_scale.json`` instead.
+
+    PYTHONPATH=src python -m benchmarks.reduce_bench --n 64 --out BENCH_reduce.json
+
+``--min-speedup X`` makes the run assert that the packed engine beats the
+single engine by at least ``X``x reductions/sec in the implicit (paper
+§4.3.4, memory-bound) mode — the CI contract.  Diagrams are asserted
+identical across engines while at it, so the benchmark doubles as an
+end-to-end bit-identity check.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+ENGINES = ("single", "batch", "packed")
+MODES = ("explicit", "implicit")
+
+
+def run(n: int, seed: int, batch_size: int, maxdim: int = 2) -> dict:
+    from repro.core import compute_ph
+    from repro.core.diagrams import assert_diagrams_equal
+    from repro.data import pointclouds as pc
+
+    dists = pc.fractal_like(n, seed=seed)
+    record: dict = {
+        "benchmark": "reduce_bench",
+        "dataset": "fractal",
+        "n": int(n),
+        "maxdim": int(maxdim),
+        "batch_size": int(batch_size),
+        "engines": {},
+    }
+    reference = None
+    for mode in MODES:
+        for engine in ENGINES:
+            t0 = time.perf_counter()
+            res = compute_ph(dists=dists, maxdim=maxdim, engine=engine,
+                             mode=mode, batch_size=batch_size)
+            wall = time.perf_counter() - t0
+            s = res.stats
+            red_t = s.get("t_h1", 0.0) + s.get("t_h2", 0.0)
+            n_red = s.get("h1_n_reductions", 0.0) \
+                + s.get("h2_n_reductions", 0.0)
+            entry = {
+                "mode": mode,
+                "t_reduction_s": round(red_t, 4),
+                "t_total_s": round(wall, 4),
+                "n_reductions": int(n_red),
+                "reductions_per_s": round(n_red / max(red_t, 1e-9), 1),
+                "stored_bytes": int(s.get("h2_stored_bytes", 0)),
+            }
+            if engine == "packed":
+                for k in ("n_rounds", "n_expansions", "n_evictions",
+                          "n_consolidations", "peak_block_bytes"):
+                    entry[k] = int(s.get(f"h2_{k}", 0))
+            record["engines"][f"{engine}_{mode}"] = entry
+            record["n_e"] = int(s["n_e"])
+            if reference is None:
+                reference = res.diagrams
+            else:   # every engine x mode must reproduce identical diagrams
+                assert_diagrams_equal(reference, res.diagrams,
+                                      dims=list(range(maxdim + 1)))
+
+    eng = record["engines"]
+    for mode in MODES:
+        record[f"speedup_rps_packed_vs_single_{mode}"] = round(
+            eng[f"packed_{mode}"]["reductions_per_s"]
+            / max(eng[f"single_{mode}"]["reductions_per_s"], 1e-9), 2)
+    # headline: the memory-bound (implicit) regime the paper optimizes for
+    record["speedup_rps_packed_vs_single"] = \
+        record["speedup_rps_packed_vs_single_implicit"]
+    return record
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--n", type=int, default=64,
+                    help="fractal point count (reduction work grows ~n^3)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--batch-size", type=int, default=256)
+    ap.add_argument("--maxdim", type=int, default=2)
+    ap.add_argument("--min-speedup", type=float, default=None,
+                    help="assert packed >= X times single reductions/sec "
+                         "(implicit mode); the CI contract")
+    ap.add_argument("--out", type=str, default="BENCH_reduce.json")
+    args = ap.parse_args()
+
+    record = run(args.n, args.seed, args.batch_size, maxdim=args.maxdim)
+    with open(args.out, "w") as f:
+        json.dump(record, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(json.dumps(record, indent=2, sort_keys=True))
+    print(f"wrote {args.out}")
+    if args.min_speedup is not None:
+        got = record["speedup_rps_packed_vs_single"]
+        assert got >= args.min_speedup, (
+            f"packed engine speedup regressed: {got}x < "
+            f"{args.min_speedup}x (implicit mode)")
+        print(f"speedup {got}x >= {args.min_speedup}x: ok")
+
+
+if __name__ == "__main__":
+    main()

@@ -26,7 +26,7 @@ def main() -> None:
         ("table1_datasets (paper Table 1)",
          lambda: table1_datasets.main(args.scale)),
         ("table2_phases (paper Table 2)",
-         lambda: table2_phases.main(args.scale)),
+         lambda: table2_phases.main(["--scale", str(args.scale)])),
         ("table3_vs_baseline (paper Table 3 / Fig. 18)",
          table3_vs_baseline.main),
         ("table4_variants (paper Table 4)",

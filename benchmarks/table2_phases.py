@@ -1,7 +1,15 @@
 """Table 2 analog: per-phase timing of the Dory pipeline — filtration (+
-neighborhoods), H0, H1*, H2* — on the benchmark suite."""
+neighborhoods), H0, H1*, H2* — on the benchmark suite.
+
+    PYTHONPATH=src python -m benchmarks.table2_phases --engine packed --scale 0.5
+
+``--engine`` picks the reduction engine (``single`` / ``batch`` /
+``packed``); per-phase reduction counts ride along so the engines'
+reduction throughput can be compared row by row.
+"""
 from __future__ import annotations
 
+import argparse
 import time
 from typing import Dict, List
 
@@ -10,19 +18,23 @@ from repro.core import compute_ph
 from .suite import build_suite
 
 
-def run(scale: float = 1.0, engine: str = "batch") -> List[Dict]:
+def run(scale: float = 1.0, engine: str = "batch",
+        batch_size: int = 256) -> List[Dict]:
     rows = []
     for name, ds in build_suite(scale).items():
         t0 = time.perf_counter()
-        res = compute_ph(engine=engine, **ds.kwargs())
+        res = compute_ph(engine=engine, batch_size=batch_size, **ds.kwargs())
         wall = time.perf_counter() - t0
         s = res.stats
         rows.append(dict(
             dataset=name, n=int(s["n"]), n_e=int(s["n_e"]),
+            engine=engine,
             t_filtration_s=round(s["t_filtration"], 3),
             t_h0_s=round(s["t_h0"], 3),
             t_h1_s=round(s.get("t_h1", 0.0), 3),
             t_h2_s=round(s.get("t_h2", 0.0), 3),
+            n_reductions_h1=int(s.get("h1_n_reductions", 0)),
+            n_reductions_h2=int(s.get("h2_n_reductions", 0)),
             total_s=round(wall, 3),
             h1_pairs=len(res.diagrams.get(1, ())),
             h2_pairs=len(res.diagrams.get(2, ())),
@@ -30,8 +42,19 @@ def run(scale: float = 1.0, engine: str = "batch") -> List[Dict]:
     return rows
 
 
-def main(scale: float = 1.0) -> None:
-    rows = run(scale)
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--engine", default="batch",
+                    choices=["single", "batch", "packed"],
+                    help="reduction engine for the H1*/H2* phases")
+    ap.add_argument("--scale", type=float, default=1.0,
+                    help="dataset size multiplier (suite is laptop-scale "
+                         "at 1.0)")
+    ap.add_argument("--batch-size", type=int, default=256,
+                    help="serial-parallel batch width (batch/packed)")
+    args = ap.parse_args(argv)
+
+    rows = run(args.scale, engine=args.engine, batch_size=args.batch_size)
     cols = list(rows[0].keys())
     print(",".join(cols))
     for r in rows:

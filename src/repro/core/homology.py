@@ -148,7 +148,10 @@ def compute_ph(
     sparse: neighborhoods (Dory) vs dense order matrix (DoryNS); default picks
     NS for small n where the O(n^2) table is cheap, and always picks the
     order-free sparse path for streamed filtrations (no dense order matrix).
-    engine: "single" (1-thread analog) or "batch" (serial-parallel, §4.4).
+    engine: "single" (1-thread analog), "batch" (serial-parallel, §4.4) or
+    "packed" (serial-parallel on bit-packed GF(2) blocks — the
+    ``kernels/gf2`` Pallas kernels on TPU, their numpy mirrors on host; same
+    diagrams, by far the fastest reduction path).
     backend: "dense" materializes the (n, n) distance matrix (seed behavior);
     "tiled" streams it through ``repro.scale`` in (tile_m, tile_n) blocks —
     peak filtration memory O(tile + n + n_e), the million-point path.
@@ -160,8 +163,10 @@ def compute_ph(
     With ``memory_budget_bytes`` and no finite ``tau_max``, the threshold is
     auto-picked so the paper's ``(3n + 12 n_e) * 4`` account fits the
     budget; the same budget also caps the H2* candidate-enumeration
-    transient and spills explicit ``R^⊥`` columns to implicit ``V^⊥``
-    storage once the reduction store exceeds it.
+    transient and bounds the reduction store of *every* engine — explicit
+    ``R^⊥`` columns spill to implicit ``V^⊥`` storage largest-first once
+    the store exceeds it, and the packed engine additionally sizes its bit
+    blocks to the budget.
     """
     stats: Dict[str, float] = {}
     if mesh is not None and (filtration is not None or backend != "tiled"):
@@ -212,11 +217,22 @@ def compute_ph(
         def _reduce(adapter, cols, mode=mode, cleared=None):
             return reduce_dimension_batched(adapter, cols, mode=mode,
                                             cleared=cleared,
-                                            batch_size=batch_size)
-    else:
+                                            batch_size=batch_size,
+                                            store_budget_bytes=memory_budget_bytes)
+    elif engine == "packed":
+        from .packed_reduce import reduce_dimension_packed
+
+        def _reduce(adapter, cols, mode=mode, cleared=None):
+            return reduce_dimension_packed(adapter, cols, mode=mode,
+                                           cleared=cleared,
+                                           batch_size=batch_size,
+                                           store_budget_bytes=memory_budget_bytes)
+    elif engine == "single":
         def _reduce(adapter, cols, mode=mode, cleared=None):
             return reduce_dimension(adapter, cols, mode=mode, cleared=cleared,
                                     store_budget_bytes=memory_budget_bytes)
+    else:
+        raise ValueError(f"unknown engine {engine!r}")
 
     diagrams: Dict[int, np.ndarray] = {}
 

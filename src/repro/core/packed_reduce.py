@@ -1,0 +1,624 @@
+"""Bit-packed serial-parallel reduction engine (Dory §4.4 × kernels/gf2).
+
+``reduce_dimension_batched`` (the host serial-parallel engine) spends its
+time in per-column Python work: one ``merge_cancel`` sort per GF(2) add and
+several one-element adapter probes per reduction (the profile is dominated
+by ``cobdy``/``min_cobdy``/``owner_of_low`` calls on ``np.array([x])``
+singletons).  This engine keeps the paper's batch structure — parallel
+phase against the committed pivots, serial phase for intra-batch
+collisions, clearance commit — but holds each batch in *one* bit-packed
+block for its whole reduction:
+
+* **rank compression** — per batch, the sorted unique key set of the
+  batch's coboundaries plus the first round of gathered addends becomes the
+  block's bit-space (``kernels.gf2.scatter_bits``): key ``universe[i]``
+  lives at bit ``i``, so ascending keys are ascending ranks, a
+  first-set-bit scan (``gf2_find_low`` / ``find_low_np``) *is* the engine's
+  ``low``, and one 32-word VREG XOR covers 32,768 matrix entries;
+* **parallel phase** — one :meth:`PivotStore.lookup_addends_batched` probe
+  per round (one ``owner_of_low`` / ``min_cobdy`` / ``cobdy`` call for the
+  whole batch), then the hit rows absorb their gathered committed-pivot
+  addends: an in-place bit scatter-XOR on host, ``gf2_parallel_xor`` on the
+  gathered addend block on TPU.  Only rows whose low moved are probed
+  again;
+* **segmented growth vs eviction** — an addend with keys outside the
+  bit-space either *expands* the space (the new keys append as a fresh
+  word-aligned segment; no re-ranking, lows become a min over per-segment
+  find-lows) or *evicts* its row to plain sorted-key form (``merge_cancel``
+  chains, as in the host engine).  Dense rounds expand — many rows keep
+  XOR-ing in block form; sparse rounds (a few deep single-column chains,
+  e.g. H1* on a near-clique) evict — one stubborn chain must not balloon
+  the whole block's bit-space.  Segments consolidate to one sorted universe
+  only past ``_MAX_SEGMENTS`` — or eagerly on the kernel path, where the
+  kernels need the single globally-sorted bit-space;
+* **serial phase** — intra-batch low collisions resolve in one host walk
+  over the batch in filtration order (a ``low -> row`` dict; packed rows
+  XOR whole block rows, evicted rows ``merge_cancel``), with gens updated
+  per absorption exactly like the host engine.  On the kernel path a
+  ``gf2_serial_reduce`` pre-pass first clears the packed-vs-packed
+  collisions in VMEM: ``ceil(B/32)`` *V-words* ride at the block's tail,
+  reset to the identity before the pass, so afterwards each row's V bits
+  name exactly the batch mates it absorbed — the δ-expansion bookkeeping
+  recovered by unpacking ``ceil(B/32)`` words instead of per-XOR updates;
+* **clearance** — lows unpack back to int64 keys and commit through the
+  existing :class:`PivotStore` (budgeted, largest-explicit-first spill), so
+  explicit/implicit/budget semantics are shared with the other engines.
+  Trivial pairs commit nothing, so their rows are never unpacked at all.
+
+Diagrams are bit-identical to ``reduce_dimension`` for every mode/budget
+(asserted in tests): all engines perform left-to-right GF(2) column
+additions, and the lows of any fully reduced matrix are canonical.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from ..kernels.gf2 import (NO_LOW, find_low_np, scatter_bits,
+                           scatter_xor_bits, set_bit_positions)
+from .pairing import EMPTY_KEY
+from .reduction import (DimensionAdapter, PivotStore, ReductionResult,
+                        clearance_commit, clearing_filter, merge_cancel)
+
+_MAX_SEGMENTS = 12   # host path consolidates past this many segments
+_EVICT_MAX = 8       # rounds needing new keys for fewer rows evict instead
+
+
+def _resolve_use_kernels(use_kernels: Optional[bool]) -> bool:
+    """Pallas kernels on TPU, numpy mirrors elsewhere (repo-wide policy:
+    Mosaic only exists on TPU; interpret-mode Pallas is for tests)."""
+    if use_kernels is None:
+        import jax
+        return jax.default_backend() == "tpu"
+    return bool(use_kernels)
+
+
+def _words(n_keys: int, use_kernels: bool) -> int:
+    """Segment width in words; bucketed on the kernel path so the jitted
+    Pallas calls see a handful of shapes, not one per universe size."""
+    w = max(1, (n_keys + 31) // 32)
+    return -(-w // 128) * 128 if use_kernels else w
+
+
+def _find_low_row(col: np.ndarray) -> int:
+    """First-set-bit rank of one packed uint32 row; NO_LOW when zero."""
+    nz = col != 0
+    if not nz.any():
+        return NO_LOW
+    w = int(nz.argmax())
+    word = int(col[w])
+    return w * 32 + ((word & -word).bit_length() - 1)
+
+
+def _budgeted_batch_size(batch_size: int, cob_width: int,
+                         store_budget_bytes: Optional[int]) -> int:
+    """Cap the batch so the resident bit block fits the byte budget.
+
+    The batch block is ``B`` rows × ``~B·K/32`` words ≈ ``B²K/8`` bytes
+    (plus the same again transiently for a kernel-path addend gather).
+    Inverting for ``B`` bounds the packed-block scratch the same way
+    ``h2_columns`` bounds its enumeration scratch; neither changes the
+    output.  Best-effort: the batch never shrinks below 32 rows (a
+    narrower batch loses the batching the engine exists for), so very
+    small budgets bound the block at the 32-row floor, not the budget.
+    """
+    if store_budget_bytes is None:
+        return batch_size
+    b = int(np.sqrt(max(1.0, 4.0 * store_budget_bytes / max(1, cob_width))))
+    return int(np.clip(b, 32, batch_size))
+
+
+class _PackedBatch:
+    """One batch resident in packed form, with a scalar escape hatch.
+
+    Layout: ``block[:, 0:cap]`` is the R region — a sequence of
+    word-aligned segments, each a sorted key array mapped to consecutive
+    bit ranks — and ``block[:, cap:cap+VW]`` are the V-words the kernel
+    serial pre-pass uses for δ-expansion tracking (zero otherwise).
+    ``scalar`` maps evicted rows to plain int64 key arrays; ``lows`` holds
+    every row's current low *key* (-1 = empty), which survives segment
+    growth, consolidation and eviction unchanged.
+    """
+
+    def __init__(self, cob: np.ndarray, seed_addends: List[np.ndarray],
+                 use_kernels: bool):
+        B = cob.shape[0]
+        self.B = B
+        self.VW = (B + 31) // 32
+        self.use_kernels = use_kernels
+        mask = cob != EMPTY_KEY
+        seg0 = np.unique(np.concatenate([cob[mask]] + seed_addends))
+        self.segs: List[np.ndarray] = [seg0]
+        self.seg_off: List[int] = [0]          # word offset per segment
+        self.r_words = _words(len(seg0), use_kernels)
+        self.cap = self.r_words
+        self.block = np.zeros((B, self.cap + self.VW), dtype=np.uint32)
+        ridx, _ = np.nonzero(mask)
+        pos = np.searchsorted(seg0, cob[mask])
+        scatter_bits(self.block, ridx, pos)
+        self.scalar: Dict[int, np.ndarray] = {}
+        self.lows = np.where(cob[:, 0] == EMPTY_KEY, np.int64(-1), cob[:, 0])
+        self.peak_bytes = self.block.nbytes
+        self.n_consolidations = 0
+        self.n_expansions = 0
+        self.n_evictions = 0
+
+    # -- universe bookkeeping ------------------------------------------------
+
+    def _grow_cap(self, need: int) -> None:
+        new_cap = max(need, 2 * self.cap)
+        block = np.zeros((self.B, new_cap + self.VW), dtype=np.uint32)
+        block[:, :self.r_words] = self.block[:, :self.r_words]
+        # V region is zero outside the kernel pre-pass — nothing to move
+        self.block = block
+        self.cap = new_cap
+        self.peak_bytes = max(self.peak_bytes, block.nbytes)
+
+    def add_segment(self, new_keys: np.ndarray) -> None:
+        """Append new addend keys as a fresh word-aligned segment — no
+        re-ranking of resident bits (rank order only holds per segment;
+        lows are reconstructed as a min over segments)."""
+        w = _words(len(new_keys), self.use_kernels)
+        if self.r_words + w > self.cap:
+            self._grow_cap(self.r_words + w)
+        self.segs.append(new_keys)
+        self.seg_off.append(self.r_words)
+        self.r_words += w
+        if self.use_kernels or len(self.segs) > _MAX_SEGMENTS:
+            self.consolidate()
+
+    def consolidate(self) -> None:
+        """Merge all segments into one sorted universe (one global remap).
+        The kernel path runs consolidated always: ``gf2_find_low`` /
+        ``gf2_serial_reduce`` read the first set *bit*, which equals the
+        min *key* only in a single globally-sorted bit-space."""
+        if len(self.segs) == 1:
+            return
+        self.n_consolidations += 1
+        ridx_all, keys_all = [], []
+        for seg, off in zip(self.segs, self.seg_off):
+            w = _words(len(seg), self.use_kernels)
+            ridx, pos, _ = set_bit_positions(self.block[:, off:off + w])
+            keep = pos < len(seg)
+            ridx_all.append(ridx[keep])
+            keys_all.append(seg[pos[keep]])
+        ridx = np.concatenate(ridx_all)
+        keys = np.concatenate(keys_all)
+        universe = np.unique(np.concatenate(self.segs))
+        self.segs = [universe]
+        self.seg_off = [0]
+        self.r_words = _words(len(universe), self.use_kernels)
+        if self.r_words > self.cap:
+            self.cap = self.r_words
+        self.block = np.zeros((self.B, self.cap + self.VW), dtype=np.uint32)
+        self.peak_bytes = max(self.peak_bytes, self.block.nbytes)
+        pos = np.searchsorted(universe, keys)
+        order = np.lexsort((pos, ridx))
+        scatter_bits(self.block, ridx[order], pos[order])
+
+    def _abs_positions(self, keys: np.ndarray
+                       ) -> Tuple[np.ndarray, np.ndarray]:
+        """Absolute bit position of each key (32·segment word offset +
+        in-segment rank) plus the mask of keys in no segment yet."""
+        out = np.full(len(keys), -1, dtype=np.int64)
+        todo = np.ones(len(keys), dtype=bool)
+        for seg, off in zip(self.segs, self.seg_off):
+            if not len(seg) or not todo.any():
+                continue
+            pos = np.minimum(np.searchsorted(seg, keys), len(seg) - 1)
+            hit = todo & (seg[pos] == keys)
+            out[hit] = off * 32 + pos[hit]
+            todo &= ~hit
+        return out, todo
+
+    # -- representation moves ------------------------------------------------
+
+    def _unpack_row(self, c: int) -> np.ndarray:
+        parts = []
+        for seg, off in zip(self.segs, self.seg_off):
+            if not len(seg):
+                continue
+            w = _words(len(seg), self.use_kernels)
+            _, pos, _ = set_bit_positions(self.block[c:c + 1, off:off + w])
+            pos = pos[pos < len(seg)]
+            if pos.size:
+                parts.append(seg[pos])
+        return np.concatenate(parts) if parts else np.zeros(0, dtype=np.int64)
+
+    def evict(self, c: int) -> None:
+        """Move row ``c`` to scalar (sorted-key) form: one stubborn chain
+        must not balloon the shared bit-space."""
+        if c in self.scalar:
+            return
+        self.n_evictions += 1
+        keys = self._unpack_row(c)
+        keys.sort(kind="stable")
+        self.block[c, :self.r_words] = 0
+        self.scalar[c] = keys
+
+    # -- lows ----------------------------------------------------------------
+
+    def refresh_lows(self, rows: np.ndarray) -> None:
+        """Recompute ``lows[rows]`` (packed rows) as the min key over
+        per-segment find-lows (``gf2_find_low`` on the kernel path)."""
+        rows = np.asarray(rows, dtype=np.int64)
+        if not rows.size:
+            return
+        best = np.full(len(rows), EMPTY_KEY, dtype=np.int64)
+        for seg, off in zip(self.segs, self.seg_off):
+            if not len(seg):
+                continue
+            w = _words(len(seg), self.use_kernels)
+            sub = self.block[rows, off:off + w]
+            if self.use_kernels:
+                import jax.numpy as jnp
+
+                from ..kernels.gf2 import gf2_find_low
+                pad = (-len(rows)) % 32   # bucket row counts for the jit
+                if pad:
+                    sub = np.vstack(
+                        [sub, np.zeros((pad, w), dtype=np.uint32)])
+                lb = np.asarray(gf2_find_low(jnp.asarray(sub)))[:len(rows)]
+            else:
+                lb = find_low_np(sub)
+            k = np.where(lb == NO_LOW, EMPTY_KEY,
+                         seg[np.minimum(lb, len(seg) - 1)])
+            best = np.minimum(best, k)
+        self.lows[rows] = np.where(best == EMPTY_KEY, -1, best)
+
+    def _row_low(self, c: int) -> int:
+        best = -1
+        for seg, off in zip(self.segs, self.seg_off):
+            if not len(seg):
+                continue
+            w = _words(len(seg), self.use_kernels)
+            lb = _find_low_row(self.block[c, off:off + w])
+            if lb != NO_LOW and lb < len(seg):
+                k = int(seg[lb])
+                if best < 0 or k < best:
+                    best = k
+        return best
+
+    # -- parallel phase ------------------------------------------------------
+
+    def xor_addends(self, hit: List[int],
+                    addends: List[Optional[np.ndarray]]) -> None:
+        """Parallel-phase GF(2) add: gathered addends into the hit rows —
+        an in-place scatter-XOR on host, ``gf2_parallel_xor`` on a packed
+        addend block on the kernel path; scalar rows ``merge_cancel``.
+
+        Addend keys outside every segment either append as a fresh segment
+        (dense rounds) or evict their rows (sparse rounds, ``_EVICT_MAX``).
+        """
+        scalar_hit = [i for i in hit if i in self.scalar]
+        packed_hit = [i for i in hit if i not in self.scalar]
+        if packed_hit:
+            lens = np.array([len(addends[i]) for i in packed_hit],
+                            dtype=np.int64)
+            keys = np.concatenate([addends[i] for i in packed_hit])
+            ridx = np.repeat(np.asarray(packed_hit, dtype=np.int64), lens)
+            pos, missing = self._abs_positions(keys)
+            if missing.any():
+                miss_rows = np.unique(ridx[missing])
+                if len(miss_rows) <= _EVICT_MAX:
+                    for i in miss_rows:
+                        self.evict(int(i))
+                        scalar_hit.append(int(i))
+                    keep = ~np.isin(ridx, miss_rows)
+                    ridx, pos = ridx[keep], pos[keep]
+                    packed_hit = [i for i in packed_hit
+                                  if i not in self.scalar]
+                else:
+                    self.n_expansions += 1
+                    new_seg = np.unique(keys[missing])
+                    n_segs = len(self.segs) + 1
+                    self.add_segment(new_seg)
+                    if len(self.segs) == n_segs:
+                        # append-only: found positions are still valid
+                        off = self.seg_off[-1]
+                        pos[missing] = off * 32 + np.searchsorted(
+                            new_seg, keys[missing])
+                    else:   # consolidation re-ranked everything
+                        pos, miss2 = self._abs_positions(keys)
+                        assert not miss2.any()
+        if packed_hit:
+            if self.use_kernels:
+                import jax.numpy as jnp
+
+                from ..kernels.gf2 import gf2_parallel_xor
+                local = {r: k for k, r in enumerate(packed_hit)}
+                lrid = np.array([local[int(r)] for r in ridx],
+                                dtype=np.int64)
+                order = np.lexsort((pos, lrid))
+                packed = np.zeros((len(packed_hit), self.cap),
+                                  dtype=np.uint32)
+                scatter_bits(packed, lrid[order], pos[order])
+                self.peak_bytes = max(self.peak_bytes,
+                                      self.block.nbytes + packed.nbytes)
+                rview = self.block[:, :self.cap]
+                rview[packed_hit] = np.asarray(gf2_parallel_xor(
+                    jnp.asarray(rview[packed_hit]), jnp.asarray(packed)))
+            else:
+                order = np.lexsort((pos, ridx))
+                scatter_xor_bits(self.block, ridx[order], pos[order])
+            self.refresh_lows(np.asarray(packed_hit, dtype=np.int64))
+        for i in scalar_hit:
+            merged = merge_cancel(self.scalar[i], addends[i])
+            self.scalar[i] = merged
+            self.lows[i] = int(merged[0]) if merged.size else -1
+
+    # -- serial phase --------------------------------------------------------
+
+    def serial_pass(self, gens: List[Dict[int, int]],
+                    ids_int: List[int]) -> Tuple[int, np.ndarray]:
+        """Resolve intra-batch low collisions in filtration order.
+
+        Kernel path: a ``gf2_serial_reduce`` V-augmented pre-pass clears
+        packed-vs-packed collisions in VMEM (V bits -> gens merge), then
+        the host walk finishes scalar-involved collisions.  Host path: the
+        walk does everything — packed rows XOR whole block rows, scalar
+        rows ``merge_cancel``, a packed row absorbing a scalar mate evicts
+        first.  Returns ``(n_reductions, changed_row_indices)``.
+        """
+        n_red = 0
+        changed: Dict[int, bool] = {}
+        if self.use_kernels:
+            n_red += self._serial_kernel_prepass(gens, ids_int, changed)
+        low_to_row: Dict[int, int] = {}
+        for c in range(self.B):
+            low = int(self.lows[c])
+            while low >= 0:
+                j = low_to_row.get(low)
+                if j is None:
+                    break
+                n_red += 1
+                changed[c] = True
+                c_packed = c not in self.scalar
+                j_packed = j not in self.scalar
+                if c_packed and not j_packed:
+                    self.evict(c)
+                    c_packed = False
+                if c_packed:
+                    self.block[c] ^= self.block[j]
+                    low = self._row_low(c)
+                else:
+                    jkeys = self.scalar[j] if not j_packed \
+                        else self._unpack_row(j)
+                    merged = merge_cancel(self.scalar[c], jkeys)
+                    self.scalar[c] = merged
+                    low = int(merged[0]) if merged.size else -1
+                gens[c][ids_int[j]] = gens[c].get(ids_int[j], 0) + 1
+                for g, p in gens[j].items():
+                    gens[c][g] = gens[c].get(g, 0) + p
+            self.lows[c] = low
+            if low >= 0:
+                low_to_row[low] = c
+        return n_red, np.array(sorted(changed), dtype=np.int64)
+
+    def _serial_kernel_prepass(self, gens: List[Dict[int, int]],
+                               ids_int: List[int],
+                               changed: Dict[int, bool]) -> int:
+        """Kernel pre-pass on the packed rows: V-identity words ride the
+        block tail, ``gf2_serial_reduce`` XORs colliding rows in VMEM, and
+        the V bits name each row's absorbed mates afterwards (scalar rows'
+        block rows are zero, hence inert; zero slack words between the R
+        segment and the V-words are skipped by the kernel's find-low; and
+        V-rank collisions only ever involve R-empty rows)."""
+        import jax.numpy as jnp
+
+        from ..kernels.gf2 import gf2_serial_reduce
+
+        assert len(self.segs) == 1
+        B, cap = self.B, self.cap
+        vbit = np.arange(B)
+        vslice = self.block[:, cap:]
+        vslice[...] = 0
+        # scalar rows get no identity bit: inert rows must not register lows
+        live = np.array([i not in self.scalar for i in range(B)])
+        lv = vbit[live]
+        vslice[lv, lv >> 5] |= np.uint32(1) << (lv & 31).astype(np.uint32)
+        C, W = B, cap + self.VW
+        Cp, Wp = -(-C // 32) * 32, -(-W // 128) * 128
+        padded = np.zeros((Cp, Wp), dtype=np.uint32)
+        padded[:C, :W] = self.block
+        red, _, n_red = gf2_serial_reduce(jnp.asarray(padded[None]))
+        self.block[...] = np.asarray(red)[0, :C, :W]
+        n_red = int(np.asarray(n_red)[0])
+        if n_red == 0:
+            vslice[...] = 0
+            return 0
+        vrid, vpos, _ = set_bit_positions(vslice)
+        vkeep = vpos < B
+        counts = np.bincount(vrid[vkeep], minlength=B).astype(np.int64)
+        vrows = np.split(vpos[vkeep], np.cumsum(counts)[:-1])
+        touched = [i for i in range(B) if vrows[i].size > 1]
+        entry = {int(i): dict(gens[i]) for i in touched}
+        for i in touched:
+            changed[int(i)] = True
+            newg = dict(entry[int(i)])
+            for j in vrows[i]:
+                j = int(j)
+                if j == i:
+                    continue
+                newg[ids_int[j]] = newg.get(ids_int[j], 0) + 1
+                # unchanged mates keep their live gens; changed mates use
+                # their pass-entry snapshot (the kernel walk is ascending)
+                for g, p in entry.get(j, gens[j]).items():
+                    newg[g] = newg.get(g, 0) + p
+            gens[i] = newg
+        vslice[...] = 0
+        if touched:
+            self.refresh_lows(np.array(touched, dtype=np.int64))
+        return n_red
+
+    # -- clearance -----------------------------------------------------------
+
+    def unpack(self, rows: np.ndarray) -> List[np.ndarray]:
+        """``rows`` as int64 key arrays, one block pass per segment.
+
+        Row keys come out ascending *within* each segment's contribution
+        (segment-major order overall, not globally sorted) — every consumer
+        either re-ranks per key (the pack/scatter paths) or re-sorts
+        (``merge_cancel``, ``parity_reduce``), so a global per-row sort
+        would buy nothing.  Clearance also only unpacks the rows it will
+        store: trivial pairs commit nothing."""
+        rows = np.asarray(rows, dtype=np.int64)
+        n = len(rows)
+        if not n:
+            return []
+        out_scalar = {int(i): self.scalar[int(i)] for i in rows
+                      if int(i) in self.scalar}
+        packed_rows = np.array([i for i in rows if int(i) not in self.scalar],
+                               dtype=np.int64)
+        np_rows = len(packed_rows)
+        parts = []
+        counts = np.zeros(np_rows, dtype=np.int64)
+        for seg, off in zip(self.segs, self.seg_off):
+            if not len(seg) or not np_rows:
+                continue
+            w = _words(len(seg), self.use_kernels)
+            ridx, pos, cnt = set_bit_positions(
+                self.block[packed_rows, off:off + w])
+            keep = pos < len(seg)
+            if not keep.all():
+                ridx, pos = ridx[keep], pos[keep]
+                cnt = np.bincount(ridx, minlength=np_rows).astype(np.int64)
+            parts.append((ridx, seg[pos], cnt))
+            counts += cnt
+        out = np.empty(int(counts.sum()), dtype=np.int64)
+        row_start = np.zeros(np_rows + 1, dtype=np.int64)
+        np.cumsum(counts, out=row_start[1:])
+        fill = row_start[:-1].copy()
+        for ridx, keys, cnt in parts:
+            if not len(keys):
+                continue
+            part_off = np.cumsum(cnt) - cnt
+            within = np.arange(len(keys), dtype=np.int64) - part_off[ridx]
+            out[fill[ridx] + within] = keys
+            fill += cnt
+        packed_cols = np.split(out, row_start[1:-1]) if np_rows else []
+        packed_iter = iter(packed_cols)
+        return [out_scalar[int(i)] if int(i) in out_scalar
+                else next(packed_iter) for i in rows]
+
+
+def reduce_dimension_packed(
+    adapter: DimensionAdapter,
+    column_ids: np.ndarray,
+    mode: str = "explicit",
+    cleared=None,
+    batch_size: int = 256,
+    store_budget_bytes: Optional[int] = None,
+    use_kernels: Optional[bool] = None,
+) -> ReductionResult:
+    """Bit-packed serial-parallel cohomology reduction (module docstring).
+
+    Same contract as ``reduce_dimension`` / ``reduce_dimension_batched``:
+    ``column_ids`` in decreasing filtration order, diagrams bit-identical to
+    both.  ``use_kernels=None`` resolves to the Pallas kernels on TPU and
+    the numpy block mirrors elsewhere; ``True`` forces the kernels (they
+    interpret off-TPU — the test path).
+    """
+    use_kernels = _resolve_use_kernels(use_kernels)
+    store = PivotStore(adapter, mode, store_budget_bytes=store_budget_bytes)
+    pairs: List[tuple] = []
+    essentials: List[float] = []
+    n_reductions = 0
+    n_rounds = 0
+    n_expansions = 0
+    n_evictions = 0
+    n_consolidations = 0
+    peak_block_bytes = 0
+    queue = clearing_filter(column_ids, cleared)
+    eff_batch = batch_size
+
+    pos = 0
+    first = True
+    while pos < len(queue):
+        ids = queue[pos:pos + eff_batch]
+        cob = adapter.cobdy(ids)
+        if first:
+            first = False
+            eff_batch = _budgeted_batch_size(batch_size, cob.shape[1],
+                                             store_budget_bytes)
+            if eff_batch < len(ids):
+                ids, cob = ids[:eff_batch], cob[:eff_batch]
+        pos += len(ids)
+        B = len(ids)
+        ids_arr = np.asarray(ids, dtype=np.int64)
+        ids_int = [int(i) for i in ids_arr]
+        gens: List[Dict[int, int]] = [dict() for _ in range(B)]
+
+        # seed the bit-space with the first round of addends so the common
+        # case packs exactly once
+        lows0 = np.where(cob[:, 0] == EMPTY_KEY, np.int64(-1), cob[:, 0])
+        addends, owners, owner_gens = \
+            store.lookup_addends_batched(lows0, ids_arr)
+        batchblk = _PackedBatch(
+            cob, [a for a in addends if a is not None], use_kernels)
+
+        probe = np.zeros(B, dtype=bool)   # rows whose low moved since probe
+        while True:
+            hit = [i for i in range(B) if addends[i] is not None]
+            if hit:
+                n_rounds += 1
+                n_reductions += len(hit)
+                for i in hit:
+                    o = int(owners[i])
+                    gens[i][o] = gens[i].get(o, 0) + 1
+                    for g in owner_gens[i]:
+                        g = int(g)
+                        gens[i][g] = gens[i].get(g, 0) + 1
+                batchblk.xor_addends(hit, addends)
+                probe[hit] = batchblk.lows[hit] >= 0
+
+            # intra-batch collisions -> one serial pass, filtration order
+            nz = batchblk.lows[batchblk.lows >= 0]
+            if len(np.unique(nz)) != len(nz):
+                n_red, changed = batchblk.serial_pass(gens, ids_int)
+                n_reductions += n_red
+                probe[changed] = batchblk.lows[changed] >= 0
+
+            if not probe.any():
+                break
+            probe_lows = np.where(probe, batchblk.lows, -1)
+            probe[:] = False
+            addends, owners, owner_gens = \
+                store.lookup_addends_batched(probe_lows, ids_arr)
+
+        peak_block_bytes = max(peak_block_bytes, batchblk.peak_bytes)
+        n_consolidations += batchblk.n_consolidations
+        n_expansions += batchblk.n_expansions
+        n_evictions += batchblk.n_evictions
+
+        # ---- clearance: batched value lookups, commit in batch order;
+        # get_columns unpacks exactly the rows whose R keys the store will
+        # hold (trivial pairs and pure implicit stores unpack nothing) ----
+        clearance_commit(store, adapter, ids_arr, batchblk.lows, gens,
+                         batchblk.unpack, pairs, essentials)
+
+    pair_arr = np.array([(b, d) for b, d, _ in pairs if d > b],
+                        dtype=np.float64).reshape(-1, 2)
+    pivot_lows = np.array([low for _, _, low in pairs], dtype=np.int64)
+    return ReductionResult(
+        pairs=pair_arr,
+        essentials=np.array(essentials, dtype=np.float64),
+        pivot_lows=pivot_lows,
+        stats={
+            "n_columns": float(len(queue)),
+            "n_reductions": float(n_reductions),
+            "n_pairs": float(len(pairs)),
+            "n_essential": float(len(essentials)),
+            "stored_bytes": float(store.bytes_stored),
+            "n_stored_columns": float(len(store.columns)),
+            "n_spilled": float(store.n_spilled),
+            "batch_size": float(eff_batch),
+            "n_rounds": float(n_rounds),
+            "n_expansions": float(n_expansions),
+            "n_evictions": float(n_evictions),
+            "n_consolidations": float(n_consolidations),
+            "peak_block_bytes": float(peak_block_bytes),
+            "use_kernels": float(use_kernels),
+        },
+    )

@@ -24,7 +24,8 @@ and reuses the same column primitives.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Optional
+import heapq
+from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -95,13 +96,23 @@ class PivotStore:
     """R^⊥/V^⊥ storage with trivial pairs excluded (paper §4.3.1, §4.3.5).
 
     ``store_budget_bytes`` makes the explicit store *budgeted*: once the
-    stored bytes would cross the budget, further columns are committed in
-    implicit form (V^⊥ generator lists, re-materialized on lookup) instead —
-    memory stays bounded by the budget plus one column, at the price of
-    re-enumerating coboundaries when a spilled column is looked up.  The
-    reduction's output is unchanged: both representations reproduce the
-    identical ``R^⊥`` keys.  Per-column representation is tracked in
-    ``col_modes`` so the two forms coexist in one table.
+    stored bytes would cross the budget, columns are demoted to implicit
+    form (V^⊥ generator lists, re-materialized on lookup) — memory stays
+    bounded by the budget plus one column, at the price of re-enumerating
+    coboundaries when a spilled column is looked up.  The reduction's output
+    is unchanged: both representations reproduce the identical ``R^⊥`` keys.
+    Per-column representation is tracked in ``col_modes`` so the two forms
+    coexist in one table.
+
+    Spill *policy* is largest-explicit-column-first (a max-heap over
+    explicit column sizes): when a commit would cross the budget, the
+    biggest explicit columns already in the store are demoted to implicit
+    until the incoming column fits — unless the incoming column is itself
+    at least as big as everything stored, in which case it is the one that
+    goes implicit.  Big columns buy the least lookups per byte, so evicting
+    them first keeps the most pivots explicit under a fixed budget (the
+    earlier policy never demoted: whatever committed first stayed explicit
+    forever, i.e. naive FIFO).
 
     Mixed mode needs one extra invariant: a spilled column's stored V must
     be a *complete* δ-basis expansion, which requires the expansions of the
@@ -127,6 +138,10 @@ class PivotStore:
         self.col_modes: List[str] = []
         self.bytes_stored = 0
         self.n_spilled = 0
+        # max-heap (as negated sizes) over explicit column byte sizes for the
+        # largest-explicit-column-first spill policy; entries are permanent
+        # (a column is popped exactly once, when demoted)
+        self._explicit_heap: List[Tuple[int, int]] = []
 
     def lookup_addend(self, low: int, self_id: int) -> Optional[np.ndarray]:
         """Column to add into r given its current low; None if low is fresh.
@@ -151,21 +166,66 @@ class PivotStore:
         keys = self.adapter.cobdy(gens).ravel()
         return parity_reduce(keys)
 
+    def _demote(self, idx: int) -> None:
+        """Convert a stored explicit column to implicit (V^⊥) in place."""
+        assert self.col_modes[idx] == "explicit" \
+            and self.gens_lists[idx] is not None
+        self.bytes_stored -= self.columns[idx].nbytes
+        self.columns[idx] = self.gens_lists[idx]
+        self.col_modes[idx] = "implicit"
+        self.n_spilled += 1
+
+    def _make_room(self, incoming_total: int, incoming_r_nbytes: int) -> bool:
+        """Largest-explicit-column-first spill: demote the biggest explicit
+        columns until ``incoming_total`` more bytes (R keys plus tracked
+        gens) fit the budget.  Returns False (caller commits implicitly)
+        once the incoming column's R keys are at least as big as every
+        remaining explicit column — demoting smaller columns to admit a
+        bigger one would only shrink the explicit set.  Demotions are
+        planned first and applied only when they actually make the
+        incoming column fit: demotion is one-way (the explicit R keys are
+        dropped), so a doomed admission must not evict anything."""
+        planned: List[Tuple[int, int]] = []
+        freed = 0
+        fits = True
+        while self.bytes_stored - freed + incoming_total \
+                > self.store_budget_bytes:
+            if not self._explicit_heap:
+                fits = False
+                break
+            neg_size, idx = self._explicit_heap[0]
+            if -neg_size <= incoming_r_nbytes:
+                fits = False
+                break
+            planned.append(heapq.heappop(self._explicit_heap))
+            freed += -neg_size
+        if not fits:
+            for item in planned:
+                heapq.heappush(self._explicit_heap, item)
+            return False
+        for _, idx in planned:
+            self._demote(idx)
+        return True
+
     def commit(self, low: int, col_id: int, r: np.ndarray, gens: np.ndarray,
                trivial: bool) -> None:
         if trivial:
             return  # never stored (paper §4.3.5)
         mode = self.mode
-        if (mode == "explicit" and self.store_budget_bytes is not None
-                and self.bytes_stored + r.nbytes > self.store_budget_bytes):
-            mode = "implicit"       # budget spill: keep V gens, drop R keys
-            self.n_spilled += 1
+        if mode == "explicit" and self.store_budget_bytes is not None:
+            incoming = r.nbytes + (gens.nbytes if self.track_gens else 0)
+            if not self._make_room(incoming, r.nbytes):
+                mode = "implicit"   # budget spill: keep V gens, drop R keys
+                self.n_spilled += 1
         self.low_to_idx[low] = len(self.columns)
         self.col_ids.append(col_id)
         self.col_modes.append(mode)
         if mode == "explicit":
             self.columns.append(r)
             self.bytes_stored += r.nbytes
+            if self.store_budget_bytes is not None:
+                heapq.heappush(self._explicit_heap,
+                               (-r.nbytes, len(self.columns) - 1))
             # keep the δ-expansion too when spilling is possible: a later
             # spilled column that absorbed this one needs it (see class
             # docstring); counted against the budget for honesty
@@ -176,6 +236,62 @@ class PivotStore:
             self.columns.append(gens)
             self.gens_lists.append(gens)
             self.bytes_stored += gens.nbytes
+
+    def lookup_addends_batched(self, lows: np.ndarray, self_ids: np.ndarray):
+        """Vectorized :meth:`lookup_addend` over a batch of columns.
+
+        ``lows``: (B,) int64 current lows (negative = inactive, skipped);
+        ``self_ids``: (B,) int64 owning column ids.  Returns
+        ``(addends, owners, owner_gens)`` — per column the addend key array
+        (None when the low is fresh), the owner column id, and the owner's
+        stored δ-expansion (empty for trivial owners / untracked columns).
+        The per-element adapter calls of the scalar path (one
+        ``np.array([x])`` per probe) collapse into one ``owner_of_low``, one
+        ``min_cobdy``, and one ``cobdy`` call per batch round.
+        """
+        lows = np.asarray(lows, dtype=np.int64)
+        self_ids = np.asarray(self_ids, dtype=np.int64)
+        B = len(lows)
+        addends: List[Optional[np.ndarray]] = [None] * B
+        owners = np.full(B, -1, dtype=np.int64)
+        owner_gens: List[Optional[np.ndarray]] = [None] * B
+        no_gens = np.zeros(0, dtype=np.int64)
+        active = lows >= 0
+        if not active.any():
+            return addends, owners, owner_gens
+        own = np.full(B, -1, dtype=np.int64)
+        own[active] = self.adapter.owner_of_low(lows[active])
+        # trivial pairs first (order mirrors lookup_addend): owner != self
+        # and low == min δ(owner)  =>  addend is δ(owner) itself
+        cand = active & (own != self_ids)
+        trivial = np.zeros(B, dtype=bool)
+        if cand.any():
+            ci = np.where(cand)[0]
+            mc = self.adapter.min_cobdy(own[ci])
+            trivial[ci[mc == lows[ci]]] = True
+        if trivial.any():
+            ti = np.where(trivial)[0]
+            tcob = self.adapter.cobdy(own[ti])
+            for k, i in enumerate(ti):
+                row = tcob[k]
+                addends[i] = row[row != EMPTY_KEY]
+                owners[i] = own[i]
+                owner_gens[i] = no_gens
+        for i in np.where(active & ~trivial)[0]:
+            idx = self.low_to_idx.get(int(lows[i]))
+            if idx is None:
+                continue
+            owners[i] = self.col_ids[idx]
+            g = self.gens_lists[idx]
+            owner_gens[i] = g if g is not None else no_gens
+            if self.col_modes[idx] == "explicit":
+                addends[i] = self.columns[idx]
+            else:
+                gens = np.concatenate([
+                    self.columns[idx],
+                    np.array([self.col_ids[idx]], dtype=np.int64)])
+                addends[i] = parity_reduce(self.adapter.cobdy(gens).ravel())
+        return addends, owners, owner_gens
 
 
 def clearing_filter(column_ids, cleared) -> np.ndarray:
@@ -195,6 +311,57 @@ def clearing_filter(column_ids, cleared) -> np.ndarray:
     if ids.size == 0 or carr.size == 0:
         return ids
     return ids[~np.isin(ids, carr)]
+
+
+def clearance_commit(store: PivotStore, adapter: DimensionAdapter,
+                     ids: np.ndarray, lows: np.ndarray,
+                     gens_list, get_columns,
+                     pairs: List[tuple], essentials: List[float]) -> None:
+    """Batched clearance (§4.4 "clearance" step), shared by the batch and
+    packed engines: batched value lookups, trivial-pair detection, commits
+    in batch order.
+
+    ``lows``: (B,) int64 current lows (-1 = empty column -> essential).
+    ``get_columns(rows)`` materializes the R key arrays for exactly the
+    rows whose explicit columns the store will hold — it is never called
+    for trivial pairs (nothing stored, §4.3.5) nor for a pure implicit
+    store (only gens stored).  Appends ``(birth, death, low)`` tuples and
+    essential births in place.
+    """
+    ids_arr = np.asarray(ids, dtype=np.int64)
+    lows = np.asarray(lows, dtype=np.int64)
+    B = len(ids_arr)
+    empty = [i for i in range(B) if lows[i] < 0]
+    if empty:
+        births = adapter.birth_value(ids_arr[empty])
+        essentials.extend(float(b) for b in births)
+    nonempty = [i for i in range(B) if lows[i] >= 0]
+    if not nonempty:
+        return
+    ne_ids = ids_arr[nonempty]
+    ne_lows = lows[nonempty]
+    mcs = adapter.min_cobdy(ne_ids)
+    ne_owners = adapter.owner_of_low(ne_lows)
+    births = adapter.birth_value(ne_ids)
+    deaths = adapter.death_value(ne_lows)
+    trivial = (np.asarray(mcs) == ne_lows) & (np.asarray(ne_owners) == ne_ids)
+    if store.mode == "implicit":
+        store_rows = np.zeros(0, dtype=np.int64)
+    else:
+        store_rows = np.asarray(nonempty, dtype=np.int64)[~trivial]
+    cols = dict(zip(store_rows.tolist(), get_columns(store_rows)))
+    no_col = np.zeros(0, dtype=np.int64)
+    for k, i in enumerate(nonempty):
+        if trivial[k]:
+            store.commit(int(ne_lows[k]), int(ne_ids[k]), no_col, no_col,
+                         True)
+        else:
+            g = np.array(
+                [kk for kk, p in gens_list[i].items() if p % 2 == 1],
+                dtype=np.int64)
+            store.commit(int(ne_lows[k]), int(ne_ids[k]), cols.get(i, no_col),
+                         g, False)
+        pairs.append((float(births[k]), float(deaths[k]), int(ne_lows[k])))
 
 
 def reduce_dimension(

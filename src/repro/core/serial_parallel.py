@@ -21,20 +21,23 @@ paper's batch-size hyperparameter discussion.
 """
 from __future__ import annotations
 
-from typing import Dict, List
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
 from .pairing import EMPTY_KEY
 from .reduction import (DimensionAdapter, PivotStore, ReductionResult,
-                        clearing_filter, merge_cancel)
+                        clearance_commit, clearing_filter, merge_cancel)
 
 
 def _reduce_vs_store(store: PivotStore, adapter: DimensionAdapter,
                      r: np.ndarray, col_id: int,
-                     gens: Dict[int, int]) -> np.ndarray:
+                     gens: Dict[int, int]) -> Tuple[np.ndarray, int]:
     """Reduce r against committed pivots + trivial owners until its low is
-    fresh (the parallel-phase rule).  Returns the partially-reduced r."""
+    fresh (the parallel-phase rule).  Returns the partially-reduced r and
+    the number of GF(2) column additions performed (the unit every engine
+    counts, so cross-engine reductions/sec is comparable)."""
+    n_adds = 0
     while r.size:
         low = int(r[0])
         addend = store.lookup_addend(low, col_id)
@@ -45,7 +48,8 @@ def _reduce_vs_store(store: PivotStore, adapter: DimensionAdapter,
         for g in _owner_gens(store, low):
             gens[int(g)] = gens.get(int(g), 0) + 1
         r = merge_cancel(r, addend)
-    return r
+        n_adds += 1
+    return r, n_adds
 
 
 def _owner_id(store: PivotStore, adapter: DimensionAdapter, low: int) -> int:
@@ -68,8 +72,15 @@ def reduce_dimension_batched(
     mode: str = "explicit",
     cleared=None,
     batch_size: int = 128,
+    store_budget_bytes: Optional[int] = None,
 ) -> ReductionResult:
-    store = PivotStore(adapter, mode)
+    """Serial-parallel batched reduction (module docstring).
+
+    ``store_budget_bytes`` bounds the pivot store exactly like the single
+    engine's: explicit ``R^⊥`` columns past the budget spill to implicit
+    ``V^⊥`` form, largest-explicit-column-first (see :class:`PivotStore`).
+    """
+    store = PivotStore(adapter, mode, store_budget_bytes=store_budget_bytes)
     pairs: List[tuple] = []
     essentials: List[float] = []
     n_reductions = 0
@@ -87,10 +98,15 @@ def reduce_dimension_batched(
 
         # ---- parallel phase ----
         for i in range(B):
-            rs[i] = _reduce_vs_store(store, adapter, rs[i], int(ids[i]), gens[i])
-            n_reductions += 1
+            rs[i], n_adds = _reduce_vs_store(store, adapter, rs[i],
+                                             int(ids[i]), gens[i])
+            n_reductions += n_adds
 
         # ---- serial phase (in filtration order within the batch) ----
+        # marked columns are final and hold pairwise-distinct lows, so one
+        # low -> batch-index dict replaces the former O(B^2) linear scan
+        # for a marked mate with the same low
+        marked_low_to_j: Dict[int, int] = {}
         for i in range(B):
             r = rs[i]
             while True:
@@ -107,17 +123,11 @@ def reduce_dimension_batched(
                     r = merge_cancel(r, addend)
                     n_reductions += 1
                     continue
-                # look for an earlier, marked batch mate with the same low
-                hit = None
-                for j in range(i):
-                    if marked[j] and not empty[j] and rs[j].size and \
-                            int(rs[j][0]) == low:
-                        hit = j
-                        break
-                if hit is None:
+                j = marked_low_to_j.get(low)
+                if j is None:
                     marked[i] = True
+                    marked_low_to_j[low] = i
                     break
-                j = hit
                 jid = int(ids[j])
                 gens[i][jid] = gens[i].get(jid, 0) + 1
                 for g, p in gens[j].items():
@@ -126,23 +136,12 @@ def reduce_dimension_batched(
                 n_reductions += 1
             rs[i] = r
 
-        # ---- clearance: commit the whole batch ----
-        for i in range(B):
-            col_id = int(ids[i])
-            if empty[i]:
-                essentials.append(float(
-                    adapter.birth_value(np.array([col_id], dtype=np.int64))[0]))
-                continue
-            low = int(rs[i][0])
-            mc = int(adapter.min_cobdy(np.array([col_id], dtype=np.int64))[0])
-            owner = int(adapter.owner_of_low(np.array([low], dtype=np.int64))[0])
-            trivial = (mc == low) and (owner == col_id)
-            g = np.array([k for k, p in gens[i].items() if p % 2 == 1],
-                         dtype=np.int64)
-            store.commit(low, col_id, rs[i], g, trivial)
-            b = float(adapter.birth_value(np.array([col_id], dtype=np.int64))[0])
-            d = float(adapter.death_value(np.array([low], dtype=np.int64))[0])
-            pairs.append((b, d, low))
+        # ---- clearance: commit the whole batch (batched value lookups) ----
+        lows = np.array([int(rs[i][0]) if rs[i].size else -1
+                         for i in range(B)], dtype=np.int64)
+        clearance_commit(store, adapter, ids, lows, gens,
+                         lambda rows: [rs[int(i)] for i in rows],
+                         pairs, essentials)
 
     pair_arr = np.array([(b, d) for b, d, _ in pairs if d > b],
                         dtype=np.float64).reshape(-1, 2)
@@ -158,6 +157,7 @@ def reduce_dimension_batched(
             "n_essential": float(len(essentials)),
             "stored_bytes": float(store.bytes_stored),
             "n_stored_columns": float(len(store.columns)),
+            "n_spilled": float(store.n_spilled),
             "batch_size": float(batch_size),
         },
     )

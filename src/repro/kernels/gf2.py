@@ -13,6 +13,20 @@ matrix entries.  Two kernels:
   column's low, XOR the earlier column in.  Grid parallelizes over blocks
   (= the paper's thread batches / our mesh shards); the data-dependent inner
   walk is a ``lax.while_loop`` inside the kernel.
+* ``gf2_parallel_xor`` — the *parallel phase* counterpart: XOR a column
+  block against a gathered addend block (each batch column against the
+  committed pivot column owning its low) in one elementwise VREG pass.
+
+The host-side rank-compression vocabulary lives here too: the sorted
+unique ``universe`` of active cofacet keys maps key ``universe[i]`` to bit
+``i``, so ascending key order equals ascending bit order and the kernels'
+first-set-bit *is* the engines' ``low``.  The packed engine
+(``core/packed_reduce.py``) moves between key arrays and bit blocks with
+the primitive trio ``scatter_bits`` / ``scatter_xor_bits`` /
+``set_bit_positions`` (plus ``find_low_np``, the word-level numpy mirror
+of ``gf2_find_low``); ``pack_keys_to_bits`` / ``bits_to_keys`` are the
+whole-block reference forms of the same mapping (the oracle the property
+tests check the primitives and kernels against).
 
 Block geometry: a (C=128 cols, W=2048 words) block = 1 MB of VMEM, i.e. a
 65,536-row bit space per block — comfortably double-bufferable in ~16 MB
@@ -22,15 +36,141 @@ deep; wide row spaces are nearly free (vector XOR).
 from __future__ import annotations
 
 import functools
-from typing import Optional
+from typing import List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 
 from .backend import pad_to_multiple, resolve_interpret
 
 NO_LOW = 2**31 - 1  # python int: kernels must not capture traced constants
+
+
+# ---------------------------------------------------------------------------
+# Host-side bit packing (rank compression into the block bit-space)
+# ---------------------------------------------------------------------------
+
+def pack_keys_to_bits(rows: Sequence[np.ndarray], universe: np.ndarray,
+                      n_words: Optional[int] = None) -> np.ndarray:
+    """Pack sorted int64 key rows into a (B, W) uint32 bit block.
+
+    ``universe`` is the sorted unique key array of the compressed bit-space;
+    every key of every row must be present in it.  Key ``universe[i]`` maps
+    to bit ``i`` (word ``i >> 5``, bit ``i & 31``) — ascending keys become
+    ascending bit indices, so ``gf2_find_low`` on the packed block returns
+    the rank of each row's minimum key.  ``n_words`` widens the block (extra
+    zero words) so callers can append augmentation bits.
+    """
+    W = max(1, (len(universe) + 31) // 32)
+    if n_words is not None:
+        W = max(W, int(n_words))
+    B = len(rows)
+    packed = np.zeros((B, W), dtype=np.uint32)
+    lens = np.array([len(r) for r in rows], dtype=np.int64)
+    if lens.sum() == 0:
+        return packed
+    keys = np.concatenate([np.asarray(r, dtype=np.int64) for r in rows])
+    ridx = np.repeat(np.arange(B, dtype=np.int64), lens)
+    pos = np.searchsorted(universe, keys)
+    scatter_bits(packed, ridx, pos)
+    return packed
+
+
+def _scatter_groups(block: np.ndarray, ridx: np.ndarray, pos: np.ndarray):
+    """Shared grouping for the bit scatters: flat word indices + per-word
+    bit sums.
+
+    ``pos`` must be ascending within each row and each (row, rank) pair
+    unique — then the flat word index is globally sorted, distinct bits of
+    one word sum without carries, and the whole grouping is one
+    ``add.reduceat`` over the nnz coordinates (no full-width buffer, unlike
+    ``bincount``; no per-element loop, unlike ``ufunc.at``)."""
+    W = block.shape[1]
+    word = ridx * W + (pos >> 5)
+    val = np.uint32(1) << (pos & 31).astype(np.uint32)
+    first = np.empty(len(word), dtype=bool)
+    first[0] = True
+    np.not_equal(word[1:], word[:-1], out=first[1:])
+    starts = np.flatnonzero(first)
+    return word[starts], np.add.reduceat(val, starts)
+
+
+def scatter_bits(block: np.ndarray, ridx: np.ndarray,
+                 pos: np.ndarray) -> None:
+    """OR bits at ``(row, bit-rank)`` coordinates into a uint32 block
+    (packing into fresh/zero words; see :func:`_scatter_groups` for the
+    coordinate contract)."""
+    if not pos.size:
+        return
+    idx, sums = _scatter_groups(block, ridx, pos)
+    block.reshape(-1)[idx] |= sums
+
+
+def scatter_xor_bits(block: np.ndarray, ridx: np.ndarray,
+                     pos: np.ndarray) -> None:
+    """XOR bits at ``(row, bit-rank)`` coordinates into a uint32 block —
+    the in-place GF(2) column add of the packed engine's parallel phase
+    (same coordinate contract as :func:`scatter_bits`)."""
+    if not pos.size:
+        return
+    idx, sums = _scatter_groups(block, ridx, pos)
+    block.reshape(-1)[idx] ^= sums
+
+
+def set_bit_positions(block: np.ndarray):
+    """Set-bit coordinates of a (B, W) uint32 block, word-granular.
+
+    Returns ``(ridx, pos, counts)`` — row index and bit rank of every set
+    bit (ascending rank within each row) and the per-row set-bit counts.
+    Only the non-zero *words* are expanded to bits, so sparse blocks cost
+    ``O(B·W)`` word scans plus ``O(32·nnz_words)``, not ``O(32·B·W)``.
+    """
+    block = np.ascontiguousarray(block, dtype=np.uint32)
+    B, _ = block.shape
+    rw, cw = np.nonzero(block)
+    words = block[rw, cw]
+    bits = np.unpackbits(words.view(np.uint8).reshape(-1, 4),
+                         axis=1, bitorder="little")
+    m, b = np.nonzero(bits)
+    ridx = rw[m]
+    pos = cw[m] * 32 + b
+    counts = np.bincount(ridx, minlength=B).astype(np.int64)
+    return ridx, pos, counts
+
+
+def bits_to_keys(block: np.ndarray, universe: np.ndarray) -> List[np.ndarray]:
+    """Inverse of :func:`pack_keys_to_bits`: bit block -> sorted key rows.
+
+    Bits at rank >= len(universe) (augmentation words) are ignored.
+    """
+    ridx, pos, counts = set_bit_positions(block)
+    keep = pos < len(universe)
+    if not keep.all():
+        counts = np.bincount(ridx[keep],
+                             minlength=block.shape[0]).astype(np.int64)
+        pos = pos[keep]
+    return np.split(universe[pos], np.cumsum(counts)[:-1])
+
+
+def find_low_np(block: np.ndarray) -> np.ndarray:
+    """Numpy mirror of :func:`gf2_find_low` (host fast path): first-set-bit
+    rank per row of a (B, W) uint32 block; NO_LOW for all-zero rows.
+
+    Word-granular like the kernel: first non-zero word by argmax, then the
+    isolated lowest set bit's exponent via ``frexp`` (exact for powers of
+    two) — no per-bit expansion of the block.
+    """
+    block = np.asarray(block, dtype=np.uint32)
+    B, _ = block.shape
+    nzw = block != 0
+    any_set = nzw.any(axis=1)
+    w = nzw.argmax(axis=1)
+    words = block[np.arange(B), w].astype(np.int64)
+    lsb = (words & -words).astype(np.float64)
+    bit = np.frexp(lsb)[1] - 1
+    return np.where(any_set, w * 32 + bit, NO_LOW).astype(np.int32)
 
 
 def _find_low_word(col: jnp.ndarray) -> jnp.ndarray:
@@ -144,3 +284,36 @@ def gf2_serial_reduce(blocks: jnp.ndarray, interpret: Optional[bool] = None):
         ],
         interpret=interpret,
     )(blocks)
+
+
+def _parallel_xor_kernel(cols_ref, addends_ref, out_ref):
+    out_ref[...] = cols_ref[...] ^ addends_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block_c", "interpret"))
+def gf2_parallel_xor(cols: jnp.ndarray, addends: jnp.ndarray,
+                     block_c: int = 128,
+                     interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Parallel-phase GF(2) add: XOR a column block against a gathered
+    addend block.  cols, addends: (C, W) uint32; returns (C, W) uint32.
+
+    The addend block is the host-side gather of committed pivot columns
+    (one per batch column, zero rows where a column has no hit) packed into
+    the same bit-space as ``cols`` — one VREG XOR covers 32,768 matrix
+    entries.  Odd column counts self-pad to the block multiple.
+    """
+    interpret = resolve_interpret(interpret)
+    c, w = cols.shape
+    cols = pad_to_multiple(cols, block_c, axis=0)
+    addends = pad_to_multiple(addends, block_c, axis=0)
+    cp = cols.shape[0]
+    out = pl.pallas_call(
+        _parallel_xor_kernel,
+        grid=(cp // block_c,),
+        in_specs=[pl.BlockSpec((block_c, w), lambda i: (i, 0)),
+                  pl.BlockSpec((block_c, w), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((block_c, w), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((cp, w), jnp.uint32),
+        interpret=interpret,
+    )(cols, addends)
+    return out[:c]
