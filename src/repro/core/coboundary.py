@@ -42,17 +42,42 @@ def edge_cobdy_ns(filt: Filtration, e_orders: np.ndarray) -> np.ndarray:
     """Coboundary keys of a batch of edges, dense-order-matrix path.
 
     Returns (B, n) int64 packed keys, ascending, EMPTY_KEY padded.
+
+    Near-clique fast path: with the dense order matrix the candidate
+    third-vertices already arrive in ascending ``v`` order, and a case-1
+    triangle's key is ``<o_ab, v>`` — so the case-1 keys of a row are
+    *born sorted*, and every one of them precedes every case-2 key
+    (``<m, a|b>`` with ``m > o_ab``, edge orders being globally unique).
+    Instead of sorting the whole (B, n) row we compact case 1 with a
+    cumsum scatter and lexsort only the case-2 subset, which is exactly
+    the part that vanishes as the neighborhood approaches a clique whose
+    diameter is the column's own edge (the H1* hot shape).
     """
     e_orders = np.asarray(e_orders, dtype=np.int64)
     a = filt.edges[e_orders, 0].astype(np.int64)
     b = filt.edges[e_orders, 1].astype(np.int64)
     oa = filt.order[a].astype(np.int64)           # (B, n)
     ob = filt.order[b].astype(np.int64)
-    keys = _edge_keys_from_orders(e_orders[:, None], a[:, None], b[:, None],
-                                  np.arange(filt.n, dtype=np.int64)[None, :],
-                                  oa, ob)
-    keys.sort(axis=1)
-    return keys
+    keys, c1 = _edge_keys_from_orders(
+        e_orders[:, None], a[:, None], b[:, None],
+        np.arange(filt.n, dtype=np.int64)[None, :], oa, ob,
+        return_case1=True)
+    B, n = keys.shape
+    out = np.full_like(keys, EMPTY_KEY)
+    n1 = c1.sum(axis=1)
+    r1, v1 = np.nonzero(c1)
+    if r1.size:
+        out[r1, (np.cumsum(c1, axis=1) - 1)[r1, v1]] = keys[r1, v1]
+    c2 = (keys != EMPTY_KEY) & ~c1
+    r2, v2 = np.nonzero(c2)
+    if r2.size:
+        k2 = keys[r2, v2]
+        o = np.lexsort((k2, r2))
+        r2s, k2s = r2[o], k2[o]
+        starts = np.searchsorted(r2s, np.arange(B, dtype=np.int64))
+        rank = np.arange(r2s.size, dtype=np.int64) - starts[r2s]
+        out[r2s, n1[r2s] + rank] = k2s
+    return out
 
 
 def edge_cobdy_sparse(filt: Filtration, e_orders: np.ndarray) -> np.ndarray:
@@ -72,15 +97,21 @@ def edge_cobdy_sparse(filt: Filtration, e_orders: np.ndarray) -> np.ndarray:
     return keys
 
 
-def _edge_keys_from_orders(o_ab, a, b, v, oa, ob):
-    """Triangle keys for candidate third-vertices ``v`` (vectorized core)."""
+def _edge_keys_from_orders(o_ab, a, b, v, oa, ob, return_case1=False):
+    """Triangle keys for candidate third-vertices ``v`` (vectorized core).
+
+    With ``return_case1`` also returns the mask of valid case-1 entries
+    (diameter = the edge itself) for the sorted-partition fast path."""
     common = (oa >= 0) & (ob >= 0)
     m = np.maximum(oa, ob)
     kp = np.maximum(o_ab, m)
     case1 = m < o_ab
     ks = np.where(case1, v, np.where(oa > ob, b, a))
     keys = pack_np(kp, ks)
-    return np.where(common, keys, EMPTY_KEY)
+    keys = np.where(common, keys, EMPTY_KEY)
+    if return_case1:
+        return keys, common & case1
+    return keys
 
 
 def min_edge_cobdy_all(filt: Filtration, sparse: bool = True,

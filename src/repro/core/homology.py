@@ -140,6 +140,8 @@ def compute_ph(
     tile_m: int = 2048,
     tile_n: int = 2048,
     mesh=None,
+    n_shards: Optional[int] = None,
+    exchange_every: int = 4,
 ) -> PHResult:
     """Persistent homology up to ``maxdim`` (<= 2), Dory pipeline.
 
@@ -159,7 +161,17 @@ def compute_ph(
     the tile harvest across its devices (``repro.scale.shard``) — output is
     bit-identical to the serial tiled and dense builds for every device
     count, and ``memory_budget_bytes`` is then interpreted *per device*
-    (vertex-array duplication + round gather transient included).
+    (vertex-array duplication + round gather transient included).  With
+    ``engine="packed"`` the same mesh additionally distributes the GF(2)
+    reduction over its data axis (``repro.core.packed_reduce``), and is
+    then legal with any backend or a prebuilt filtration — harvest
+    sharding still requires the tiled backend.
+    n_shards: host-partitioned distributed reduction for the packed engine
+    (the deviceless simulation of an ``n_shards``-device mesh — identical
+    work split, batches dealt round-robin, same diagrams); requires
+    ``engine="packed"``.  ``exchange_every`` batches the distributed
+    pivot-exchange rounds (one wire round per that-many supersteps);
+    diagrams are cadence-independent.
     With ``memory_budget_bytes`` and no finite ``tau_max``, the threshold is
     auto-picked so the paper's ``(3n + 12 n_e) * 4`` account fits the
     budget; the same budget also caps the H2* candidate-enumeration
@@ -169,9 +181,14 @@ def compute_ph(
     blocks to the budget.
     """
     stats: Dict[str, float] = {}
-    if mesh is not None and (filtration is not None or backend != "tiled"):
+    if mesh is not None and engine != "packed" \
+            and (filtration is not None or backend != "tiled"):
         raise ValueError("mesh sharding requires backend='tiled' and no "
-                         "prebuilt filtration")
+                         "prebuilt filtration (or engine='packed', which "
+                         "distributes the reduction for any backend)")
+    if n_shards is not None and engine != "packed":
+        raise ValueError("n_shards distributes the reduction and requires "
+                         "engine='packed'")
     t0 = time.perf_counter()
     if filtration is not None:
         filt = filtration
@@ -179,13 +196,13 @@ def compute_ph(
         from ..scale import (build_filtration_sharded, build_filtration_tiled,
                              estimate_tau_max, shard_of_mesh)
 
-        n_shards = shard_of_mesh(mesh)[1] if mesh is not None else 1
+        harvest_shards = shard_of_mesh(mesh)[1] if mesh is not None else 1
         if memory_budget_bytes is not None and not np.isfinite(tau_max):
             if points is None:
                 raise ValueError(
                     "memory_budget_bytes needs points to estimate tau_max")
             tau_max = estimate_tau_max(points, memory_budget_bytes,
-                                       n_shards=n_shards,
+                                       n_shards=harvest_shards,
                                        tile_m=tile_m, tile_n=tile_n)
             stats["tau_max_estimated"] = float(tau_max)
         if mesh is not None:
@@ -223,10 +240,15 @@ def compute_ph(
         from .packed_reduce import reduce_dimension_packed
 
         def _reduce(adapter, cols, mode=mode, cleared=None):
+            # one pivot cache per dimension (created inside the call): H1
+            # and H2 lows live in different key spaces, so a shared cache
+            # across dimensions could alias numerically equal keys
             return reduce_dimension_packed(adapter, cols, mode=mode,
                                            cleared=cleared,
                                            batch_size=batch_size,
-                                           store_budget_bytes=memory_budget_bytes)
+                                           store_budget_bytes=memory_budget_bytes,
+                                           n_shards=n_shards, mesh=mesh,
+                                           exchange_every=exchange_every)
     elif engine == "single":
         def _reduce(adapter, cols, mode=mode, cleared=None):
             return reduce_dimension(adapter, cols, mode=mode, cleared=cleared,

@@ -48,6 +48,43 @@ block for its whole reduction:
 Diagrams are bit-identical to ``reduce_dimension`` for every mode/budget
 (asserted in tests): all engines perform left-to-right GF(2) column
 additions, and the lows of any fully reduced matrix are canonical.
+
+**Distributed mode** (``n_shards``/``mesh``): column batches partition
+round-robin over the shards (batch ``t`` -> shard ``t % P``, the same
+dealing :func:`repro.scale.shard.partition_tiles` uses for tiles), and each
+*superstep* fuses the P shards' next batches into ONE resident block of
+``P·B`` rows — per-device blocks simulated as row slices, which is also
+what amortizes the per-batch fixed costs (one coboundary enumeration, one
+block build, one store probe per round for all P slices) that bound the
+single-device engine.  Phases per superstep:
+
+* **concurrent phase** — the parallel phase of every slice runs against a
+  per-device *replica* of the pivot store, complete exactly up to the
+  previous superstep (pivots arrive only through the exchange wire — see
+  below), with per-slice serial passes for intra-slice collisions;
+* **tournament catch-up** — cross-slice collisions resolve in ``log2 P``
+  hypercube rounds (partner ``j XOR step``, the pairing of
+  ``core.jax_engine.make_distributed_round``): the later-ranked slice's row
+  absorbs the earlier one's current (R, gens) snapshot — later batch
+  columns follow earlier ones in processing order, so this matches the
+  left-to-right schedule and only removes work;
+* **commit sweep** — slices commit strictly in global batch order; each
+  slice first re-probes the *authoritative* store (which now holds this
+  superstep's earlier-slice pivots) until stable, so the final schedule is
+  exactly a left-to-right reduction and diagrams stay bit-identical to the
+  single-device engines for every shard count;
+* **pivot exchange** — the superstep's non-trivial commits encode into one
+  Elias–Fano wire payload per shard (:mod:`repro.core.pivot_cache`),
+  cross-ship (``jax.lax.all_gather`` under ``shard_map`` with a mesh; host
+  loop-back under ``n_shards``), decode, and install into the replica.  The
+  concurrent phase reads pivots *only* from the replica, so the wire codec
+  sits on the bit-identity critical path by construction.
+
+The shared :class:`~repro.core.pivot_cache.PackedPivotCache` memoizes each
+pivot's packed bit positions per block epoch — one pack serves every slice
+of the superstep that consumes the pivot, replacing the per-consuming-batch
+re-pack — and each implicit pivot's materialized R keys (1 enumeration per
+pivot across the whole reduction).
 """
 from __future__ import annotations
 
@@ -56,7 +93,8 @@ from typing import Dict, List, Optional, Tuple
 import numpy as np
 
 from ..kernels.gf2 import (NO_LOW, find_low_np, scatter_bits,
-                           scatter_xor_bits, set_bit_positions)
+                           scatter_xor_bits, set_bit_positions,
+                           stack_wire_payloads, unstack_wire_payloads)
 from .pairing import EMPTY_KEY
 from .reduction import (DimensionAdapter, PivotStore, ReductionResult,
                         clearance_commit, clearing_filter, merge_cancel)
@@ -122,11 +160,14 @@ class _PackedBatch:
     """
 
     def __init__(self, cob: np.ndarray, seed_addends: List[np.ndarray],
-                 use_kernels: bool):
+                 use_kernels: bool, cache=None):
         B = cob.shape[0]
         self.B = B
         self.VW = (B + 31) // 32
         self.use_kernels = use_kernels
+        self.cache = cache
+        if cache is not None:
+            cache.bump_epoch()   # fresh universe: prior positions are stale
         mask = cob != EMPTY_KEY
         seg0 = np.unique(np.concatenate([cob[mask]] + seed_addends))
         self.segs: List[np.ndarray] = [seg0]
@@ -176,6 +217,8 @@ class _PackedBatch:
         if len(self.segs) == 1:
             return
         self.n_consolidations += 1
+        if self.cache is not None:
+            self.cache.bump_epoch()   # re-ranking invalidates cached positions
         ridx_all, keys_all = [], []
         for seg, off in zip(self.segs, self.seg_off):
             w = _words(len(seg), self.use_kernels)
@@ -283,17 +326,37 @@ class _PackedBatch:
     # -- parallel phase ------------------------------------------------------
 
     def xor_addends(self, hit: List[int],
-                    addends: List[Optional[np.ndarray]]) -> None:
+                    addends: List[Optional[np.ndarray]],
+                    addend_lows: Optional[np.ndarray] = None) -> None:
         """Parallel-phase GF(2) add: gathered addends into the hit rows —
         an in-place scatter-XOR on host, ``gf2_parallel_xor`` on a packed
         addend block on the kernel path; scalar rows ``merge_cancel``.
 
         Addend keys outside every segment either append as a fresh segment
         (dense rounds) or evict their rows (sparse rounds, ``_EVICT_MAX``).
+
+        ``addend_lows[i]`` names the pivot low row ``i``'s addend came from;
+        a pivot's key array is canonical per low, so its packed positions
+        memoize in the shared cache per block epoch — repeat consumers (in
+        particular the other slices of a fused superstep) skip the
+        per-segment ``searchsorted`` re-pack entirely.
         """
         scalar_hit = [i for i in hit if i in self.scalar]
         packed_hit = [i for i in hit if i not in self.scalar]
+        memo_rows: List[int] = []
+        memo_pos: List[np.ndarray] = []
+        if packed_hit and self.cache is not None and addend_lows is not None:
+            rest = []
+            for i in packed_hit:
+                p = self.cache.get_positions(int(addend_lows[i]))
+                if p is not None and len(p) == len(addends[i]):
+                    memo_rows.append(i)
+                    memo_pos.append(p)
+                else:
+                    rest.append(i)
+            packed_hit = rest
         if packed_hit:
+            epoch0 = self.n_consolidations
             lens = np.array([len(addends[i]) for i in packed_hit],
                             dtype=np.int64)
             keys = np.concatenate([addends[i] for i in packed_hit])
@@ -306,9 +369,11 @@ class _PackedBatch:
                         self.evict(int(i))
                         scalar_hit.append(int(i))
                     keep = ~np.isin(ridx, miss_rows)
-                    ridx, pos = ridx[keep], pos[keep]
+                    ridx, pos, keys = ridx[keep], pos[keep], keys[keep]
+                    mask = ~np.isin(np.asarray(packed_hit), miss_rows)
                     packed_hit = [i for i in packed_hit
                                   if i not in self.scalar]
+                    lens = lens[mask]
                 else:
                     self.n_expansions += 1
                     new_seg = np.unique(keys[missing])
@@ -322,6 +387,41 @@ class _PackedBatch:
                     else:   # consolidation re-ranked everything
                         pos, miss2 = self._abs_positions(keys)
                         assert not miss2.any()
+            if self.cache is not None and addend_lows is not None \
+                    and packed_hit:
+                starts = np.zeros(len(packed_hit) + 1, dtype=np.int64)
+                np.cumsum(lens, out=starts[1:])
+                for k, i in enumerate(packed_hit):
+                    self.cache.put_positions(int(addend_lows[i]),
+                                             pos[starts[k]:starts[k + 1]])
+            if memo_rows and self.n_consolidations != epoch0:
+                # a consolidation re-ranked the universe under the memoized
+                # rows: recompute them (their keys were resident, so they
+                # cannot miss) and re-memoize against the new epoch
+                mkeys = np.concatenate([addends[i] for i in memo_rows])
+                mpos, mmiss = self._abs_positions(mkeys)
+                assert not mmiss.any()
+                mlens = np.array([len(addends[i]) for i in memo_rows],
+                                 dtype=np.int64)
+                starts = np.zeros(len(memo_rows) + 1, dtype=np.int64)
+                np.cumsum(mlens, out=starts[1:])
+                memo_pos = [mpos[starts[k]:starts[k + 1]]
+                            for k in range(len(memo_rows))]
+                for k, i in enumerate(memo_rows):
+                    self.cache.put_positions(int(addend_lows[i]),
+                                             memo_pos[k])
+        if memo_rows:
+            mlens = np.array([len(p) for p in memo_pos], dtype=np.int64)
+            mridx = np.repeat(np.asarray(memo_rows, dtype=np.int64), mlens)
+            mpos = (np.concatenate(memo_pos) if memo_pos
+                    else np.zeros(0, dtype=np.int64))
+            if packed_hit:
+                ridx = np.concatenate([ridx, mridx])
+                pos = np.concatenate([pos, mpos])
+                packed_hit = packed_hit + memo_rows
+            else:
+                ridx, pos = mridx, mpos
+                packed_hit = list(memo_rows)
         if packed_hit:
             if self.use_kernels:
                 import jax.numpy as jnp
@@ -350,23 +450,57 @@ class _PackedBatch:
 
     # -- serial phase --------------------------------------------------------
 
+    def _absorb(self, c: int, j: int, gens: List[Dict[int, int]],
+                ids_int: List[int]) -> int:
+        """Row ``c <- c ⊕ j`` over GF(2) with gens bookkeeping; returns
+        ``c``'s new low key (does not write ``lows``).  ``c`` must come
+        after ``j`` in processing order.  Packed rows XOR whole block rows;
+        scalar rows ``merge_cancel``; a packed row absorbing a scalar mate
+        evicts first."""
+        c_packed = c not in self.scalar
+        j_packed = j not in self.scalar
+        if c_packed and not j_packed:
+            self.evict(c)
+            c_packed = False
+        if c_packed:
+            self.block[c] ^= self.block[j]
+            low = self._row_low(c)
+        else:
+            jkeys = self.scalar[j] if not j_packed \
+                else self._unpack_row(j)
+            merged = merge_cancel(self.scalar[c], jkeys)
+            self.scalar[c] = merged
+            low = int(merged[0]) if merged.size else -1
+        gens[c][ids_int[j]] = gens[c].get(ids_int[j], 0) + 1
+        for g, p in gens[j].items():
+            gens[c][g] = gens[c].get(g, 0) + p
+        return low
+
     def serial_pass(self, gens: List[Dict[int, int]],
-                    ids_int: List[int]) -> Tuple[int, np.ndarray]:
+                    ids_int: List[int],
+                    rows: Optional[np.ndarray] = None
+                    ) -> Tuple[int, np.ndarray]:
         """Resolve intra-batch low collisions in filtration order.
 
         Kernel path: a ``gf2_serial_reduce`` V-augmented pre-pass clears
         packed-vs-packed collisions in VMEM (V bits -> gens merge), then
         the host walk finishes scalar-involved collisions.  Host path: the
-        walk does everything — packed rows XOR whole block rows, scalar
-        rows ``merge_cancel``, a packed row absorbing a scalar mate evicts
-        first.  Returns ``(n_reductions, changed_row_indices)``.
+        walk does everything via :meth:`_absorb`.  ``rows`` restricts the
+        walk to one contiguous slice (the fused-superstep drivers resolve
+        per-device slices independently; the kernel pre-pass assumes the
+        whole block and only runs unrestricted).  Returns
+        ``(n_reductions, changed_row_indices)``.
         """
         n_red = 0
         changed: Dict[int, bool] = {}
-        if self.use_kernels:
-            n_red += self._serial_kernel_prepass(gens, ids_int, changed)
+        if rows is None:
+            if self.use_kernels:
+                n_red += self._serial_kernel_prepass(gens, ids_int, changed)
+            row_iter = range(self.B)
+        else:
+            row_iter = [int(r) for r in rows]
         low_to_row: Dict[int, int] = {}
-        for c in range(self.B):
+        for c in row_iter:
             low = int(self.lows[c])
             while low >= 0:
                 j = low_to_row.get(low)
@@ -374,23 +508,7 @@ class _PackedBatch:
                     break
                 n_red += 1
                 changed[c] = True
-                c_packed = c not in self.scalar
-                j_packed = j not in self.scalar
-                if c_packed and not j_packed:
-                    self.evict(c)
-                    c_packed = False
-                if c_packed:
-                    self.block[c] ^= self.block[j]
-                    low = self._row_low(c)
-                else:
-                    jkeys = self.scalar[j] if not j_packed \
-                        else self._unpack_row(j)
-                    merged = merge_cancel(self.scalar[c], jkeys)
-                    self.scalar[c] = merged
-                    low = int(merged[0]) if merged.size else -1
-                gens[c][ids_int[j]] = gens[c].get(ids_int[j], 0) + 1
-                for g, p in gens[j].items():
-                    gens[c][g] = gens[c].get(g, 0) + p
+                low = self._absorb(c, j, gens, ids_int)
             self.lows[c] = low
             if low >= 0:
                 low_to_row[low] = c
@@ -503,6 +621,93 @@ class _PackedBatch:
                 else next(packed_iter) for i in rows]
 
 
+def _tournament_merge(blk: _PackedBatch, gens: List[Dict[int, int]],
+                      ids_int: List[int],
+                      bounds: np.ndarray) -> Tuple[int, np.ndarray]:
+    """Cross-slice catch-up in ``log2 P`` hypercube rounds.
+
+    Pairing is :func:`repro.core.jax_engine.make_distributed_round`'s
+    ``(j, j XOR step)``; the later-ranked slice absorbs, because every
+    column of a later batch follows every column of an earlier one in
+    processing order — so each absorption is a legal left-to-right column
+    addition and only removes work.  Collisions the hypercube pairing does
+    not cover (and any it creates) are caught by the driver's store-probe /
+    per-slice serial-pass loop and the exact commit sweep."""
+    n_red = 0
+    changed: set = set()
+    P = len(bounds) - 1
+    step = 1
+    while step < P:
+        for j in range(P):
+            p = j ^ step
+            if p >= j or p >= P:
+                continue   # absorber is the later-ranked slice of the pair
+            plow: Dict[int, int] = {}
+            for r in range(int(bounds[p]), int(bounds[p + 1])):
+                lw = int(blk.lows[r])
+                if lw >= 0:
+                    plow[lw] = r
+            for c in range(int(bounds[j]), int(bounds[j + 1])):
+                lw = int(blk.lows[c])
+                while lw >= 0 and lw in plow:
+                    n_red += 1
+                    changed.add(c)
+                    lw = blk._absorb(c, plow[lw], gens, ids_int)
+                blk.lows[c] = lw
+        step <<= 1
+    return n_red, np.array(sorted(changed), dtype=np.int64)
+
+
+def _resolve_reduce_shards(mesh, n_shards: Optional[int]) -> int:
+    """Shard count for the distributed driver: the mesh's data-axis size,
+    or ``n_shards`` for the host-partitioned simulation (same work split,
+    no devices needed — mirrors ``scale.shard.harvest_edges_sharded``)."""
+    if mesh is not None:
+        from ..scale.shard import shard_of_mesh
+        axis, mesh_shards = shard_of_mesh(mesh)
+        if n_shards is not None and int(n_shards) != mesh_shards:
+            raise ValueError(
+                f"n_shards={n_shards} disagrees with the mesh's "
+                f"{axis}-axis size {mesh_shards}; pass only one of them")
+        return mesh_shards
+    return 1 if n_shards is None else int(n_shards)
+
+
+def _make_exchange(mesh, n_shards: int):
+    """Pivot-exchange round: per-shard wire payloads -> all shards' payloads.
+
+    With a mesh, payloads stack into a ``(P, L)`` uint32 buffer (``L``
+    bucketed to a power of two so the jitted collective retraces a handful
+    of times, not once per superstep) and cross-ship through
+    ``jax.lax.all_gather`` under ``shard_map`` with the reduction batch
+    specs from :func:`repro.dist.sharding.reduce_specs`.  Without a mesh
+    the exchange is the host loop-back — identical payload path (encode ->
+    exchange -> decode), no devices."""
+    if mesh is None:
+        return lambda payloads: payloads
+    import jax
+    import jax.numpy as jnp
+
+    from ..dist.sharding import reduce_specs
+
+    in_spec, out_spec, axis = reduce_specs(mesh)
+    fns: Dict[int, object] = {}
+
+    def exchange(payloads: List[np.ndarray]) -> List[np.ndarray]:
+        buf, lens = stack_wire_payloads(payloads)
+        L = buf.shape[1]
+        if L not in fns:
+            def round_fn(x):
+                # per-device block (1, L); gather -> (P, L) on every device
+                return jax.lax.all_gather(x[0], axis)
+            fns[L] = jax.jit(jax.shard_map(
+                round_fn, mesh=mesh, in_specs=in_spec, out_specs=out_spec,
+                check_vma=False))
+        return unstack_wire_payloads(fns[L](jnp.asarray(buf)), lens)
+
+    return exchange
+
+
 def reduce_dimension_packed(
     adapter: DimensionAdapter,
     column_ids: np.ndarray,
@@ -511,17 +716,68 @@ def reduce_dimension_packed(
     batch_size: int = 256,
     store_budget_bytes: Optional[int] = None,
     use_kernels: Optional[bool] = None,
+    n_shards: Optional[int] = None,
+    mesh=None,
+    cache=None,
+    exchange_every: int = 4,
 ) -> ReductionResult:
     """Bit-packed serial-parallel cohomology reduction (module docstring).
 
     Same contract as ``reduce_dimension`` / ``reduce_dimension_batched``:
     ``column_ids`` in decreasing filtration order, diagrams bit-identical to
-    both.  ``use_kernels=None`` resolves to the Pallas kernels on TPU and
-    the numpy block mirrors elsewhere; ``True`` forces the kernels (they
-    interpret off-TPU — the test path).
+    both for every shard count.  ``use_kernels=None`` resolves to the Pallas
+    kernels on TPU and the numpy block mirrors elsewhere; ``True`` forces
+    the kernels (they interpret off-TPU — the test path).
+
+    ``n_shards`` > 1 or a ``mesh`` runs the fused-superstep distributed
+    driver: batches deal round-robin over the shards, each superstep's P
+    batches reduce concurrently against per-device pivot replicas fed by
+    Elias–Fano-compressed pivot-exchange rounds, and commits happen in
+    exact global batch order (module docstring).  ``exchange_every``
+    batches the exchange rounds — payloads ship every that-many supersteps,
+    amortizing the codec's fixed per-round cost (the default of 4 is where
+    the fractal benchmark's exchange time flattens; much larger backlogs
+    inflate the fused Elias–Fano universe instead).  Staleness is
+    exact-safe because the commit sweep re-probes every pivot the replica
+    has not seen yet (``pending`` below).  ``cache`` threads a caller-owned
+    :class:`~repro.core.pivot_cache.PackedPivotCache` (one is created per
+    call otherwise).
+
+    Distributed stats report two walls: the host really runs every shard's
+    work back-to-back on one process, so ``sim_wall_s`` accounts the
+    critical path a P-device mesh would execute — per-shard busy time for
+    the data-parallel phases (fused block ops attributed by row share,
+    per-slice serial passes timed directly), plus the genuinely sequential
+    parts at full cost (tournament, the in-order commit sweep, decode +
+    install, which every device performs on all P payloads).  For P == 1
+    the same accounting reproduces the measured wall.
     """
+    import time
+
     use_kernels = _resolve_use_kernels(use_kernels)
-    store = PivotStore(adapter, mode, store_budget_bytes=store_budget_bytes)
+    P = _resolve_reduce_shards(mesh, n_shards)
+    if exchange_every < 1:
+        raise ValueError("exchange_every must be >= 1")
+    if cache is None:
+        from .pivot_cache import PackedPivotCache
+        cache = PackedPivotCache()
+    commit_log: Optional[list] = [] if P > 1 else None
+    store = PivotStore(adapter, mode, store_budget_bytes=store_budget_bytes,
+                       cache=cache, commit_log=commit_log)
+    if P > 1:
+        from .pivot_cache import decode_commit_delta, encode_commit_delta
+        replica = PivotStore(adapter, mode, cache=cache)
+        exchange = _make_exchange(mesh, P)
+        lookup_store = replica
+        # commits the replica has not installed yet: each shard's wire
+        # backlog plus a map of their pivot lows -> (shard, superstep) —
+        # the only lows at which the sweep's store re-probe can possibly
+        # hit for rows that already stabilized against the replica, and
+        # the provenance that drives the sweep's critical-path accounting
+        shard_logs: List[list] = [[] for _ in range(P)]
+        pending: Dict[int, Tuple[int, int]] = {}
+    else:
+        lookup_store = store
     pairs: List[tuple] = []
     essentials: List[float] = []
     n_reductions = 0
@@ -529,37 +785,66 @@ def reduce_dimension_packed(
     n_expansions = 0
     n_evictions = 0
     n_consolidations = 0
+    n_supersteps = 0
+    n_exchange_rounds = 0
+    n_tournament_reductions = 0
+    n_sweep_probes = 0
+    exchange_bytes = 0
     peak_block_bytes = 0
+    sim_wall = 0.0
+    sim_conc = 0.0     # concurrent phase: max over shards per superstep
+    sim_sweep = 0.0    # commit sweep: critical path over the dep DAG
+    sim_sync = 0.0     # tournament + exchange rounds
     queue = clearing_filter(column_ids, cleared)
     eff_batch = batch_size
+    if len(queue):
+        cob0 = adapter.cobdy(queue[:min(batch_size, len(queue))])
+        eff_batch = _budgeted_batch_size(batch_size, cob0.shape[1],
+                                         store_budget_bytes)
 
     pos = 0
-    first = True
     while pos < len(queue):
-        ids = queue[pos:pos + eff_batch]
-        cob = adapter.cobdy(ids)
-        if first:
-            first = False
-            eff_batch = _budgeted_batch_size(batch_size, cob.shape[1],
-                                             store_budget_bytes)
-            if eff_batch < len(ids):
-                ids, cob = ids[:eff_batch], cob[:eff_batch]
-        pos += len(ids)
-        B = len(ids)
-        ids_arr = np.asarray(ids, dtype=np.int64)
+        # ---- superstep: the next up-to-P batches, dealt round-robin
+        # (batch t -> shard t % P); slice k is shard k's local batch ----
+        n_supersteps += 1
+        slice_sizes = []
+        start = pos
+        for _ in range(P):
+            if pos >= len(queue):
+                break
+            take = min(eff_batch, len(queue) - pos)
+            slice_sizes.append(take)
+            pos += take
+        ids_arr = np.asarray(queue[start:pos], dtype=np.int64)
+        bounds = np.zeros(len(slice_sizes) + 1, dtype=np.int64)
+        np.cumsum(slice_sizes, out=bounds[1:])
+        n_slices = len(slice_sizes)
+        B = len(ids_arr)
         ids_int = [int(i) for i in ids_arr]
         gens: List[Dict[int, int]] = [dict() for _ in range(B)]
+        # per-shard busy accounting: fused block ops split by row share,
+        # per-slice work timed to its slice, sync parts at full cost
+        t_fused = 0.0
+        t_slice = np.zeros(max(n_slices, 1))
+        t_seq = 0.0
+        t0 = time.perf_counter()
+        cob = adapter.cobdy(ids_arr)
 
         # seed the bit-space with the first round of addends so the common
-        # case packs exactly once
+        # case packs exactly once; the concurrent phase probes the replica
+        # (P > 1) — complete up to the last exchange round — or the store
         lows0 = np.where(cob[:, 0] == EMPTY_KEY, np.int64(-1), cob[:, 0])
         addends, owners, owner_gens = \
-            store.lookup_addends_batched(lows0, ids_arr)
+            lookup_store.lookup_addends_batched(lows0, ids_arr)
+        addend_lows = lows0
         batchblk = _PackedBatch(
-            cob, [a for a in addends if a is not None], use_kernels)
+            cob, [a for a in addends if a is not None], use_kernels,
+            cache=cache)
+        t_fused += time.perf_counter() - t0
 
         probe = np.zeros(B, dtype=bool)   # rows whose low moved since probe
         while True:
+            t0 = time.perf_counter()
             hit = [i for i in range(B) if addends[i] is not None]
             if hit:
                 n_rounds += 1
@@ -570,55 +855,217 @@ def reduce_dimension_packed(
                     for g in owner_gens[i]:
                         g = int(g)
                         gens[i][g] = gens[i].get(g, 0) + 1
-                batchblk.xor_addends(hit, addends)
+                batchblk.xor_addends(hit, addends, addend_lows)
                 probe[hit] = batchblk.lows[hit] >= 0
+            t_fused += time.perf_counter() - t0
 
-            # intra-batch collisions -> one serial pass, filtration order
-            nz = batchblk.lows[batchblk.lows >= 0]
-            if len(np.unique(nz)) != len(nz):
-                n_red, changed = batchblk.serial_pass(gens, ids_int)
+            # intra-slice collisions -> per-slice serial pass in filtration
+            # order (the whole block is one slice when P == 1)
+            for k in range(n_slices):
+                s0, s1 = int(bounds[k]), int(bounds[k + 1])
+                sl_lows = batchblk.lows[s0:s1]
+                nz = sl_lows[sl_lows >= 0]
+                if len(np.unique(nz)) != len(nz):
+                    t0 = time.perf_counter()
+                    rows = None if n_slices == 1 else np.arange(s0, s1)
+                    n_red, changed = batchblk.serial_pass(gens, ids_int,
+                                                          rows=rows)
+                    n_reductions += n_red
+                    probe[changed] = batchblk.lows[changed] >= 0
+                    t_slice[k] += time.perf_counter() - t0
+
+            if not probe.any() and n_slices > 1:
+                t0 = time.perf_counter()
+                n_red, changed = _tournament_merge(batchblk, gens, ids_int,
+                                                   bounds)
                 n_reductions += n_red
+                n_tournament_reductions += n_red
                 probe[changed] = batchblk.lows[changed] >= 0
+                t_seq += time.perf_counter() - t0
 
             if not probe.any():
                 break
+            t0 = time.perf_counter()
             probe_lows = np.where(probe, batchblk.lows, -1)
             probe[:] = False
             addends, owners, owner_gens = \
-                store.lookup_addends_batched(probe_lows, ids_arr)
+                lookup_store.lookup_addends_batched(probe_lows, ids_arr)
+            addend_lows = probe_lows
+            t_fused += time.perf_counter() - t0
+
+        # ---- exact commit sweep, slice by slice in global batch order:
+        # re-probe the *authoritative* store until stable, then
+        # clearance-commit — the realized schedule is a left-to-right
+        # reduction, so diagrams are bit-identical to the single-device
+        # engines.  Every row already stabilized against the replica, so a
+        # store probe can only hit at a ``pending`` low (committed since
+        # the last exchange round — including this superstep's
+        # earlier-slice pivots); only rows at those lows, or rows the
+        # sweep itself changed ("dirty"), need re-probing.  For the
+        # simulated wall, slice k's sweep waits only on the slices whose
+        # *this-superstep* pivots it actually absorbed (a device learns
+        # the earlier stable lows from a tiny broadcast and otherwise
+        # sweeps + commits concurrently) — ``deps`` records that DAG ----
+        t_sweep = np.zeros(max(n_slices, 1))
+        deps: List[set] = [set() for _ in range(max(n_slices, 1))]
+        for k in range(n_slices):
+            t0 = time.perf_counter()
+            s0, s1 = int(bounds[k]), int(bounds[k + 1])
+            rows = np.arange(s0, s1)
+            sids = ids_arr[s0:s1]
+            if P > 1:
+                pending_arr = np.fromiter(pending, dtype=np.int64,
+                                          count=len(pending))
+                dirty = np.zeros(len(sids), dtype=bool)
+                while True:
+                    sl_lows = batchblk.lows[s0:s1].copy()
+                    cand = dirty.copy()
+                    if pending_arr.size:
+                        cand |= np.isin(sl_lows, pending_arr)
+                    cand &= sl_lows >= 0
+                    if not cand.any():
+                        break
+                    sl_lows[~cand] = -1
+                    n_sweep_probes += 1
+                    adds, owns, ogens = \
+                        store.lookup_addends_batched(sl_lows, sids)
+                    dirty[:] = False
+                    hit_local = [i for i in range(len(sids))
+                                 if adds[i] is not None]
+                    if hit_local:
+                        n_rounds += 1
+                        n_reductions += len(hit_local)
+                        for i in hit_local:
+                            c = s0 + i
+                            o = int(owns[i])
+                            gens[c][o] = gens[c].get(o, 0) + 1
+                            for g in ogens[i]:
+                                g = int(g)
+                                gens[c][g] = gens[c].get(g, 0) + 1
+                            src = pending.get(int(sl_lows[i]))
+                            if src is not None and src[1] == n_supersteps:
+                                deps[k].add(src[0])
+                        full_adds: List[Optional[np.ndarray]] = [None] * B
+                        full_lows = np.full(B, -1, dtype=np.int64)
+                        for i in hit_local:
+                            full_adds[s0 + i] = adds[i]
+                            full_lows[s0 + i] = sl_lows[i]
+                        batchblk.xor_addends([s0 + i for i in hit_local],
+                                             full_adds, full_lows)
+                        dirty[hit_local] = True
+                    cur = batchblk.lows[s0:s1]
+                    nz = cur[cur >= 0]
+                    if len(np.unique(nz)) != len(nz):
+                        n_red, changed = batchblk.serial_pass(
+                            gens, ids_int, rows=rows)
+                        n_reductions += n_red
+                        dirty[changed - s0] = True
+                    dirty &= batchblk.lows[s0:s1] >= 0
+
+            log_mark = len(commit_log) if commit_log is not None else 0
+            clearance_commit(
+                store, adapter, sids, batchblk.lows[s0:s1],
+                gens[s0:s1],
+                lambda rr, rows=rows: batchblk.unpack(
+                    rows[np.asarray(rr, dtype=np.int64)]),
+                pairs, essentials)
+            if commit_log is not None and len(commit_log) > log_mark:
+                # drain this slice's commits straight into its shard's wire
+                # backlog; their lows are pending until the next exchange.
+                # With gens untracked (explicit, no budget) neither side of
+                # the wire ever reads a δ-expansion — don't ship them
+                fresh = commit_log[log_mark:]
+                if not store.track_gens:
+                    for r in fresh:
+                        r["gens"] = None
+                shard_logs[k].extend(fresh)
+                for r in fresh:
+                    pending[r["low"]] = (k, n_supersteps)
+                del commit_log[log_mark:]
+            t_sweep[k] += time.perf_counter() - t0
+
+        # critical path over the sweep DAG: finish(k) = t_sweep[k] +
+        # max finish over the slices k absorbed from (deps point strictly
+        # backward, so one forward pass is the longest-path DP)
+        finish = np.zeros(max(n_slices, 1))
+        for k in range(n_slices):
+            start = max((finish[d] for d in deps[k]), default=0.0)
+            finish[k] = start + t_sweep[k]
+        sweep_cp = float(finish[:max(n_slices, 1)].max()) if n_slices else 0.0
+        sim_sweep += sweep_cp
+        sim_sync += t_seq
+        t_seq += sweep_cp
 
         peak_block_bytes = max(peak_block_bytes, batchblk.peak_bytes)
         n_consolidations += batchblk.n_consolidations
         n_expansions += batchblk.n_expansions
         n_evictions += batchblk.n_evictions
 
-        # ---- clearance: batched value lookups, commit in batch order;
-        # get_columns unpacks exactly the rows whose R keys the store will
-        # hold (trivial pairs and pure implicit stores unpack nothing) ----
-        clearance_commit(store, adapter, ids_arr, batchblk.lows, gens,
-                         batchblk.unpack, pairs, essentials)
+        frac = np.asarray(slice_sizes, dtype=np.float64) / max(B, 1)
+        sim_conc += float(np.max(t_fused * frac + t_slice[:n_slices]))
+        sim_wall += float(np.max(t_fused * frac + t_slice[:n_slices])) + t_seq
+
+        # ---- pivot exchange (every ``exchange_every`` supersteps, and
+        # skipped once the queue is drained — the replica is never read
+        # again): each shard ships its backlog as one EF-compressed
+        # payload; every shard installs all decoded payloads into its
+        # replica (the host simulation installs once, which is exactly one
+        # device's worth of decode + install work) ----
+        if (P > 1 and pos < len(queue)
+                and n_supersteps % exchange_every == 0
+                and any(shard_logs)):
+            n_exchange_rounds += 1
+            t_enc = np.zeros(P)
+            payloads = []
+            for k in range(P):
+                t0 = time.perf_counter()
+                payloads.append(encode_commit_delta(shard_logs[k]))
+                t_enc[k] = time.perf_counter() - t0
+            exchange_bytes += sum(p.nbytes for p in payloads)
+            t0 = time.perf_counter()
+            for payload in exchange(payloads):
+                for rec in decode_commit_delta(payload):
+                    replica.install(rec["low"], rec["col_id"], rec["mode"],
+                                    rec["column"], rec["gens"])
+            t_exch = float(t_enc.max()) + (time.perf_counter() - t0)
+            sim_wall += t_exch
+            sim_sync += t_exch
+            shard_logs = [[] for _ in range(P)]
+            pending.clear()
 
     pair_arr = np.array([(b, d) for b, d, _ in pairs if d > b],
                         dtype=np.float64).reshape(-1, 2)
     pivot_lows = np.array([low for _, _, low in pairs], dtype=np.int64)
+    stats = {
+        "n_columns": float(len(queue)),
+        "n_reductions": float(n_reductions),
+        "n_pairs": float(len(pairs)),
+        "n_essential": float(len(essentials)),
+        "stored_bytes": float(store.bytes_stored),
+        "n_stored_columns": float(len(store.columns)),
+        "n_spilled": float(store.n_spilled),
+        "batch_size": float(eff_batch),
+        "n_rounds": float(n_rounds),
+        "n_expansions": float(n_expansions),
+        "n_evictions": float(n_evictions),
+        "n_consolidations": float(n_consolidations),
+        "peak_block_bytes": float(peak_block_bytes),
+        "use_kernels": float(use_kernels),
+        "n_shards": float(P),
+        "n_supersteps": float(n_supersteps),
+        "n_exchange_rounds": float(n_exchange_rounds),
+        "n_tournament_reductions": float(n_tournament_reductions),
+        "n_sweep_probes": float(n_sweep_probes),
+        "exchange_bytes": float(exchange_bytes),
+        "sim_wall_s": float(sim_wall),
+        "sim_conc_s": float(sim_conc),
+        "sim_sweep_s": float(sim_sweep),
+        "sim_sync_s": float(sim_sync),
+    }
+    stats.update({k: float(v) for k, v in cache.stats().items()})
     return ReductionResult(
         pairs=pair_arr,
         essentials=np.array(essentials, dtype=np.float64),
         pivot_lows=pivot_lows,
-        stats={
-            "n_columns": float(len(queue)),
-            "n_reductions": float(n_reductions),
-            "n_pairs": float(len(pairs)),
-            "n_essential": float(len(essentials)),
-            "stored_bytes": float(store.bytes_stored),
-            "n_stored_columns": float(len(store.columns)),
-            "n_spilled": float(store.n_spilled),
-            "batch_size": float(eff_batch),
-            "n_rounds": float(n_rounds),
-            "n_expansions": float(n_expansions),
-            "n_evictions": float(n_evictions),
-            "n_consolidations": float(n_consolidations),
-            "peak_block_bytes": float(peak_block_bytes),
-            "use_kernels": float(use_kernels),
-        },
+        stats=stats,
     )

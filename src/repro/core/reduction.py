@@ -124,7 +124,8 @@ class PivotStore:
     """
 
     def __init__(self, adapter: DimensionAdapter, mode: str,
-                 store_budget_bytes: Optional[int] = None):
+                 store_budget_bytes: Optional[int] = None,
+                 cache=None, commit_log: Optional[list] = None):
         assert mode in ("explicit", "implicit")
         self.adapter = adapter
         self.mode = mode
@@ -138,6 +139,13 @@ class PivotStore:
         self.col_modes: List[str] = []
         self.bytes_stored = 0
         self.n_spilled = 0
+        # shared PackedPivotCache (core.pivot_cache): memoizes implicit
+        # re-materializations and trivial-owner coboundaries by low — both
+        # canonical per low, so cache hits can never perturb bit-identity
+        self.cache = cache
+        # when set, every non-trivial commit appends a wire-format record
+        # here (the distributed driver drains it each superstep)
+        self.commit_log = commit_log
         # max-heap (as negated sizes) over explicit column byte sizes for the
         # largest-explicit-column-first spill policy; entries are permanent
         # (a column is popped exactly once, when demoted)
@@ -160,11 +168,22 @@ class PivotStore:
             return None
         if self.col_modes[idx] == "explicit":
             return self.columns[idx]
-        # implicit: re-materialize R(e') = ⊕_{e'' in V(e') ∪ {e'}} δe''.
+        return self._materialize(idx, low)
+
+    def _materialize(self, idx: int, low: int) -> np.ndarray:
+        """R(e') = ⊕_{e'' in V(e') ∪ {e'}} δe'' for an implicit column,
+        served from the shared pivot cache when possible — the reduced
+        column at a given low is canonical, so the memo is exact."""
+        if self.cache is not None:
+            keys = self.cache.get_column(low)
+            if keys is not None:
+                return keys
         gens = np.concatenate([self.columns[idx],
                                np.array([self.col_ids[idx]], dtype=np.int64)])
-        keys = self.adapter.cobdy(gens).ravel()
-        return parity_reduce(keys)
+        r = parity_reduce(self.adapter.cobdy(gens).ravel())
+        if self.cache is not None:
+            self.cache.put_column(low, r)
+        return r
 
     def _demote(self, idx: int) -> None:
         """Convert a stored explicit column to implicit (V^⊥) in place."""
@@ -236,6 +255,37 @@ class PivotStore:
             self.columns.append(gens)
             self.gens_lists.append(gens)
             self.bytes_stored += gens.nbytes
+        if self.commit_log is not None:
+            self.commit_log.append({
+                "low": low, "col_id": col_id, "mode": mode,
+                "column": r if mode == "explicit" else None,
+                "gens": gens,
+            })
+
+    def install(self, low: int, col_id: int, mode: str, column, gens) -> None:
+        """Install a decoded replicated pivot verbatim (no budget logic).
+
+        The distributed driver's per-device *replica* stores are built
+        exclusively through this path, from records that crossed the
+        pivot-exchange wire.  A replica never spills or demotes — it holds
+        whatever mode the authoritative store committed (a later demotion on
+        the authority is representational only and is not replicated)."""
+        assert mode in ("explicit", "implicit")
+        self.low_to_idx[low] = len(self.columns)
+        self.col_ids.append(col_id)
+        self.col_modes.append(mode)
+        gens = np.ascontiguousarray(gens, dtype=np.int64)
+        if mode == "explicit":
+            column = np.ascontiguousarray(column, dtype=np.int64)
+            self.columns.append(column)
+            self.bytes_stored += column.nbytes
+            self.gens_lists.append(gens if self.track_gens else None)
+            if self.track_gens:
+                self.bytes_stored += gens.nbytes
+        else:
+            self.columns.append(gens)
+            self.gens_lists.append(gens)
+            self.bytes_stored += gens.nbytes
 
     def lookup_addends_batched(self, lows: np.ndarray, self_ids: np.ndarray):
         """Vectorized :meth:`lookup_addend` over a batch of columns.
@@ -271,12 +321,27 @@ class PivotStore:
             trivial[ci[mc == lows[ci]]] = True
         if trivial.any():
             ti = np.where(trivial)[0]
-            tcob = self.adapter.cobdy(own[ti])
-            for k, i in enumerate(ti):
-                row = tcob[k]
-                addends[i] = row[row != EMPTY_KEY]
+            # a trivial addend δ(owner) is canonical per low (owner =
+            # owner_of_low(low)), so it lives in the shared cache too;
+            # only the misses get the batched enumeration
+            miss = []
+            for i in ti:
+                cached = (self.cache.get_column(int(lows[i]))
+                          if self.cache is not None else None)
+                if cached is None:
+                    miss.append(i)
+                else:
+                    addends[i] = cached
                 owners[i] = own[i]
                 owner_gens[i] = no_gens
+            if miss:
+                mi = np.asarray(miss)
+                tcob = self.adapter.cobdy(own[mi])
+                for k, i in enumerate(mi):
+                    row = tcob[k]
+                    addends[i] = row[row != EMPTY_KEY]
+                    if self.cache is not None:
+                        self.cache.put_column(int(lows[i]), addends[i])
         for i in np.where(active & ~trivial)[0]:
             idx = self.low_to_idx.get(int(lows[i]))
             if idx is None:
@@ -287,10 +352,7 @@ class PivotStore:
             if self.col_modes[idx] == "explicit":
                 addends[i] = self.columns[idx]
             else:
-                gens = np.concatenate([
-                    self.columns[idx],
-                    np.array([self.col_ids[idx]], dtype=np.int64)])
-                addends[i] = parity_reduce(self.adapter.cobdy(gens).ravel())
+                addends[i] = self._materialize(idx, int(lows[i]))
         return addends, owners, owner_gens
 
 

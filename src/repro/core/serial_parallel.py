@@ -27,7 +27,8 @@ import numpy as np
 
 from .pairing import EMPTY_KEY
 from .reduction import (DimensionAdapter, PivotStore, ReductionResult,
-                        clearance_commit, clearing_filter, merge_cancel)
+                        clearance_commit, clearing_filter, merge_cancel,
+                        self_owner_of, store_gens)
 
 
 def _reduce_vs_store(store: PivotStore, adapter: DimensionAdapter,
@@ -43,27 +44,13 @@ def _reduce_vs_store(store: PivotStore, adapter: DimensionAdapter,
         addend = store.lookup_addend(low, col_id)
         if addend is None:
             break
-        owner = _owner_id(store, adapter, low)
+        owner = self_owner_of(store, adapter, low)
         gens[owner] = gens.get(owner, 0) + 1
-        for g in _owner_gens(store, low):
+        for g in store_gens(store, low):
             gens[int(g)] = gens.get(int(g), 0) + 1
         r = merge_cancel(r, addend)
         n_adds += 1
     return r, n_adds
-
-
-def _owner_id(store: PivotStore, adapter: DimensionAdapter, low: int) -> int:
-    idx = store.low_to_idx.get(low)
-    if idx is not None:
-        return store.col_ids[idx]
-    return int(adapter.owner_of_low(np.array([low], dtype=np.int64))[0])
-
-
-def _owner_gens(store: PivotStore, low: int) -> np.ndarray:
-    idx = store.low_to_idx.get(low)
-    if idx is not None and store.gens_lists[idx] is not None:
-        return store.gens_lists[idx]
-    return np.zeros(0, dtype=np.int64)
 
 
 def reduce_dimension_batched(
@@ -116,9 +103,9 @@ def reduce_dimension_batched(
                 low = int(r[0])
                 addend = store.lookup_addend(low, int(ids[i]))
                 if addend is not None:
-                    owner = _owner_id(store, adapter, low)
+                    owner = self_owner_of(store, adapter, low)
                     gens[i][owner] = gens[i].get(owner, 0) + 1
-                    for g in _owner_gens(store, low):
+                    for g in store_gens(store, low):
                         gens[i][int(g)] = gens[i].get(int(g), 0) + 1
                     r = merge_cancel(r, addend)
                     n_reductions += 1

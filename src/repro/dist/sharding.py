@@ -44,8 +44,9 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 __all__ = [
     "activation_rules", "batch_specs", "bind_activation_rules", "bound_axis",
-    "bound_mesh", "bound_rules", "cache_specs", "constrain", "shard_params",
-    "shardings_from_specs", "spec_for_param", "tile_specs", "tree_path_str",
+    "bound_mesh", "bound_rules", "cache_specs", "constrain", "reduce_specs",
+    "shard_params", "shardings_from_specs", "spec_for_param", "tile_specs",
+    "tree_path_str",
 ]
 
 
@@ -268,6 +269,29 @@ def tile_specs(mesh) -> Tuple[Tuple[P, P], P, str]:
     ax = data_axes[-1]          # 'data' when present, else 'pod'
     spec = P(ax)
     return (spec, spec), spec, ax
+
+
+def reduce_specs(mesh) -> Tuple[P, P, str]:
+    """Specs for the distributed reduction's pivot-exchange ``shard_map``
+    (``core.packed_reduce``).
+
+    The exchange round moves one ``(P, L)`` uint32 payload buffer — shard
+    ``k``'s Elias–Fano-encoded commit delta in row ``k`` — through an
+    ``all_gather`` over the same innermost data axis the tile harvest
+    shards on: in, the leading axis shards over ``data`` (each device holds
+    its own row); out, every device returns the full gathered ``(P, L)``
+    buffer, i.e. the result is replicated (spec ``P()``), which is exactly
+    the replica-install contract: every shard sees every shard's pivots.
+
+    Returns ``(in_spec, out_spec, axis_name)`` for ``jax.shard_map``.
+    """
+    _, data_axes = _mesh_axes(mesh)
+    if not data_axes:
+        raise ValueError(
+            f"mesh axes {tuple(getattr(mesh, 'axis_names', ()))} have no "
+            "data axis to exchange reduction pivots over")
+    ax = data_axes[-1]
+    return P(ax), P(), ax
 
 
 def cache_specs(layers, mesh, seq_len: int, batch: int):

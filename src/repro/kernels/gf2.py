@@ -173,6 +173,35 @@ def find_low_np(block: np.ndarray) -> np.ndarray:
     return np.where(any_set, w * 32 + bit, NO_LOW).astype(np.int32)
 
 
+def stack_wire_payloads(payloads: Sequence[np.ndarray],
+                        min_words: int = 1024):
+    """Stack per-shard packed uint32 wire payloads into one ``(P, L)``
+    collective buffer, ``L`` bucketed to a power of two.
+
+    The distributed engine's pivot exchange cross-ships the buffer through
+    ``jax.lax.all_gather``; bucketing ``L`` keeps the jitted collective at
+    a handful of retraces instead of one per superstep, and ``min_words``
+    floors the bucket so early (small) rounds share one trace.  Returns
+    ``(buf, lens)``; :func:`unstack_wire_payloads` crops the gather result
+    back to the real payloads.
+    """
+    lens = [int(p.size) for p in payloads]
+    L = max(int(min_words), max(lens, default=1))
+    L = 1 << (L - 1).bit_length()
+    buf = np.zeros((len(payloads), L), dtype=np.uint32)
+    for k, p in enumerate(payloads):
+        buf[k, :p.size] = p
+    return buf, lens
+
+
+def unstack_wire_payloads(gathered: np.ndarray,
+                          lens: Sequence[int]) -> List[np.ndarray]:
+    """Inverse of :func:`stack_wire_payloads` on the gathered ``(P, L)``
+    buffer: every shard's payload, zero padding cropped."""
+    out = np.asarray(gathered, dtype=np.uint32)
+    return [out[k, :n] for k, n in enumerate(lens)]
+
+
 def _find_low_word(col: jnp.ndarray) -> jnp.ndarray:
     """Index of first set bit of a packed (W,) uint32 column; NO_LOW if 0."""
     nz = col != 0

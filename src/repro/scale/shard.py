@@ -41,9 +41,10 @@ from typing import List, Optional, Tuple
 import numpy as np
 
 from ..core.filtration import filtration_from_edges
-from .tiles import (DEFAULT_TILE, TileStats, _f32_threshold,
-                    _refine_f32_tile, _resolve_backend, iter_tile_edges,
-                    merge_edge_chunks, tile_grid)
+from .tiles import (DEFAULT_TILE, TileStats, _f32_dists_threshold,
+                    _f32_threshold, _refine_f32_dists_tile, _refine_f32_tile,
+                    _resolve_backend, iter_tile_edges, merge_edge_chunks,
+                    tile_grid)
 
 __all__ = ["build_filtration_sharded", "harvest_edges_sharded",
            "partition_tiles", "shard_of_mesh"]
@@ -160,6 +161,63 @@ def _harvest_shards_device(points, sq, shards, tau_max, tile_m, tile_n,
                                              max(shard_bytes, default=0))
 
 
+def _harvest_shards_device_dists(dists, shards, tau_max, tile_m, tile_n,
+                                 mesh, stats, chunks):
+    """Device rounds for a precomputed distance matrix: each device
+    thresholds its own f32 tile under ``shard_map`` (the gathered per-round
+    transient is the 1-byte candidate mask, a quarter of the f32 tile), and
+    the host re-measures candidates straight from the exact f64 matrix."""
+    import jax
+    import jax.numpy as jnp
+
+    from ..dist.sharding import tile_specs
+
+    n = dists.shape[0]
+    n_shards = len(shards)
+    thr32 = _f32_dists_threshold(tau_max)
+    _, spec, _ = tile_specs(mesh)
+
+    def round_fn(t):
+        return (t[0] <= thr32)[None]
+
+    sharded = jax.shard_map(round_fn, mesh=mesh, in_specs=spec,
+                            out_specs=spec, check_vma=False)
+
+    ii, jj, ll = chunks
+    shard_bytes = [0] * n_shards
+    buf = np.zeros((n_shards, tile_m, tile_n), dtype=np.float32)
+    n_rounds = max(len(s) for s in shards)
+    for r in range(n_rounds):
+        live = []
+        buf[:] = np.inf   # exhausted-shard padding must never pass thr32
+        for k, shard in enumerate(shards):
+            if r >= len(shard):
+                continue
+            si, sj = shard[r]
+            ei, ej = min(si + tile_m, n), min(sj + tile_n, n)
+            buf[k, :ei - si, :ej - sj] = dists[si:ei, sj:ej]
+            live.append((k, si, ei, sj, ej))
+        cand = np.asarray(sharded(jnp.asarray(buf)))
+        if stats is not None:
+            stats.gather_bytes = max(stats.gather_bytes,
+                                     cand.nbytes + buf.nbytes)
+        for k, si, ei, sj, ej in live:
+            if stats is not None:
+                stats.tiles_visited += 1
+            # crop to the real extent first: the inf padding is masked out
+            # by construction, the crop keeps the index math honest
+            iu, ju, lens = _refine_f32_dists_tile(
+                cand[k, :ei - si, :ej - sj], dists, si, ei, sj, ej,
+                tau_max, stats)
+            ii.append(iu.astype(np.int64))
+            jj.append(ju.astype(np.int64))
+            ll.append(lens)
+            shard_bytes[k] += ii[-1].nbytes + jj[-1].nbytes + ll[-1].nbytes
+    if stats is not None:
+        stats.shard_peak_harvest_bytes = max(stats.shard_peak_harvest_bytes,
+                                             max(shard_bytes, default=0))
+
+
 def harvest_edges_sharded(
     points: Optional[np.ndarray] = None,
     dists: Optional[np.ndarray] = None,
@@ -180,8 +238,12 @@ def harvest_edges_sharded(
     rounds under ``shard_map``) or ``n_shards`` (host-partitioned execution,
     no devices needed) is typically given; both default to 1 shard.
 
-    ``dists`` input and the ``numpy`` backend always harvest on the host —
-    sharding then reproduces the multi-device *work split* (and its
+    A ``dists`` matrix rides the device rounds too when a mesh is given:
+    each device thresholds its own f32 tile of the matrix and only the
+    candidate mask gathers back (``_harvest_shards_device_dists``), with
+    the exact f64 re-measure read straight from the matrix on the host.
+    Without a mesh — or with the ``numpy`` backend — ``dists`` harvests on
+    the host, reproducing the multi-device *work split* (and its
     per-device :class:`TileStats` accounting) without device transfers.
     """
     if (points is None) == (dists is None):
@@ -196,13 +258,15 @@ def harvest_edges_sharded(
         if stats is not None:
             stats.mesh_axis = axis
     n_shards = 1 if n_shards is None else int(n_shards)
-    if points is not None and mesh is not None and backend == "auto":
+    if mesh is not None and backend in ("auto", "pallas"):
         # a mesh asks for device execution: "auto" means the shard_map path
         # (interpret-mode pallas off-TPU), not the host split the serial
-        # resolver would pick on CPU
+        # resolver would pick on CPU — for points and dists inputs alike
         backend = "pallas"
+    elif points is not None:
+        backend = _resolve_backend(backend)
     else:
-        backend = _resolve_backend(backend) if points is not None else "numpy"
+        backend = "numpy"
 
     if dists is not None:
         dists = np.asarray(dists)
@@ -226,6 +290,9 @@ def harvest_edges_sharded(
     if backend == "pallas" and mesh is not None and points is not None:
         _harvest_shards_device(points, sq, shards, tau_max, tile_m, tile_n,
                                mesh, interpret, stats, chunks)
+    elif backend == "pallas" and mesh is not None and dists is not None:
+        _harvest_shards_device_dists(dists, shards, tau_max, tile_m, tile_n,
+                                     mesh, stats, chunks)
     else:
         _harvest_shards_host(points, dists, shards, tau_max,
                              tile_m, tile_n, backend, interpret, stats,

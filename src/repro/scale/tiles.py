@@ -203,6 +203,45 @@ def _f32_threshold(points: np.ndarray, sq: np.ndarray,
         if np.isfinite(tau_max) else np.float32(np.inf)
 
 
+def _f32_dists_threshold(tau_max: float) -> np.float32:
+    """Conservative f32 candidate threshold for a precomputed *length*
+    matrix: casting a length to f32 perturbs it by at most eps32/2
+    relative, so a 4-eps margin can only add candidates (each re-measured
+    against the exact f64 entry), never drop a true edge."""
+    if not np.isfinite(tau_max):
+        return np.float32(np.inf)
+    eps32 = float(np.finfo(np.float32).eps)
+    return np.float32(tau_max + 4.0 * eps32 * max(tau_max, 1.0))
+
+
+def _refine_f32_dists_tile(cand: np.ndarray, dists: np.ndarray,
+                           si: int, ei: int, sj: int, ej: int,
+                           tau_max: float, stats: Optional[TileStats]
+                           ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Exact f64 re-measure of one device-filtered dists tile.
+
+    ``cand`` is the tile's f32 candidate mask (already cropped to the real
+    ``(ei - si, ej - sj)`` extent) computed on device against
+    :func:`_f32_dists_threshold`; the exact lengths come straight from the
+    f64 matrix, so the output is bit-identical to the host dists tile for
+    any device count.
+    """
+    upper = _upper_mask(si, ei, sj, ej)
+    if upper is not None:
+        cand = cand & upper
+    if stats is not None:
+        stats.peak_tile_bytes = max(
+            stats.peak_tile_bytes,
+            2 * cand.nbytes + (0 if upper is None else upper.nbytes))
+    ri, rj = np.nonzero(cand)
+    iu, ju = si + ri, sj + rj
+    lens = np.asarray(dists[iu, ju], dtype=np.float64)
+    if stats is not None:
+        stats.candidate_pairs += int(iu.size)
+    keep = lens <= tau_max
+    return iu[keep], ju[keep], lens[keep]
+
+
 def iter_tile_edges(
     points: Optional[np.ndarray] = None,
     dists: Optional[np.ndarray] = None,
