@@ -219,6 +219,7 @@ def main() -> None:
 
     record = run(args.n, args.seed, args.batch_size, maxdim=args.maxdim)
     if args.dist_shards:
+        # analyze: allow[raw-filtration-sort] shard counts, not filtration values
         shards = sorted({int(p) for p in args.dist_shards.split(",")})
         assert shards[0] == 1, "--dist-shards needs the P=1 baseline"
         dists = pc.fractal_like(args.n, seed=args.seed)

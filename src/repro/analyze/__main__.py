@@ -1,0 +1,86 @@
+"""``python -m repro.analyze`` — run the static correctness gates.
+
+Exit status is non-zero on any unjustified lint finding or any collective
+violation; CI runs this on every push and every later PR inherits the
+gate.  Subcommands::
+
+    python -m repro.analyze            # lint + collectives (default)
+    python -m repro.analyze lint       # AST lint only
+    python -m repro.analyze collectives  # schedule checks only
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+from typing import List, Optional
+
+from .lint import Finding, lint_paths
+
+
+def _find_root(explicit: Optional[str]) -> str:
+    """The repo root: --root, else cwd, else walk up from this file."""
+    if explicit:
+        return os.path.abspath(explicit)
+    cwd = os.getcwd()
+    if os.path.isdir(os.path.join(cwd, "src", "repro")):
+        return cwd
+    here = os.path.abspath(__file__)
+    # src/repro/analyze/__main__.py -> repo root is four levels up.
+    return os.path.dirname(os.path.dirname(os.path.dirname(
+        os.path.dirname(here))))
+
+
+def _run_lint(root: str, verbose: bool) -> int:
+    findings: List[Finding] = lint_paths(root)
+    bad = [f for f in findings if not f.allowed]
+    allowed = [f for f in findings if f.allowed]
+    for finding in bad:
+        print(finding.format())
+    if verbose:
+        for finding in allowed:
+            print(finding.format())
+    print(f"lint: {len(bad)} finding(s), {len(allowed)} allowed with "
+          "justification")
+    return 1 if bad else 0
+
+
+def _run_collectives(verbose: bool) -> int:
+    from .collectives import check_repo
+
+    schedules, violations = check_repo()
+    for schedule in schedules:
+        ops = ", ".join(map(str, schedule.ops)) or "no collectives"
+        print(f"collectives: {schedule.where}: {ops}")
+    for violation in violations:
+        print(f"collectives: {violation}")
+    print(f"collectives: {len(schedules)} program(s) traced, "
+          f"{len(violations)} violation(s)")
+    return 1 if violations else 0
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.analyze",
+        description="Static invariant checks: repo lint rules and "
+                    "shard_map collective schedules.")
+    parser.add_argument("what", nargs="?", default="all",
+                        choices=("all", "lint", "collectives"))
+    parser.add_argument("--root", default=None,
+                        help="repo root (default: cwd if it holds "
+                             "src/repro, else derived from this file)")
+    parser.add_argument("-v", "--verbose", action="store_true",
+                        help="also print allowed findings and schedules")
+    args = parser.parse_args(argv)
+
+    root = _find_root(args.root)
+    status = 0
+    if args.what in ("all", "lint"):
+        status |= _run_lint(root, args.verbose)
+    if args.what in ("all", "collectives"):
+        status |= _run_collectives(args.verbose)
+    return status
+
+
+if __name__ == "__main__":
+    sys.exit(main())

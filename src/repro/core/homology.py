@@ -142,6 +142,7 @@ def compute_ph(
     mesh=None,
     n_shards: Optional[int] = None,
     exchange_every: int = 4,
+    sanitize: Optional[bool] = None,
 ) -> PHResult:
     """Persistent homology up to ``maxdim`` (<= 2), Dory pipeline.
 
@@ -179,6 +180,12 @@ def compute_ph(
     ``R^⊥`` columns spill to implicit ``V^⊥`` storage largest-first once
     the store exceeds it, and the packed engine additionally sizes its bit
     blocks to the budget.
+    sanitize: arm the GF(2) sanitizer (:mod:`repro.analyze.invariants`) for
+    this call — cheap incremental invariant checks (pivot-low uniqueness,
+    packed-segment consistency, wire round-trips, spill re-materialization
+    equality) that raise a structured ``SanitizeViolation`` instead of
+    returning a silently wrong diagram.  ``None`` (default) defers to the
+    ``REPRO_SANITIZE`` environment variable; ``False`` forces it off.
     """
     stats: Dict[str, float] = {}
     if mesh is not None and engine != "packed" \
@@ -258,32 +265,42 @@ def compute_ph(
 
     diagrams: Dict[int, np.ndarray] = {}
 
-    t0 = time.perf_counter()
-    h0 = compute_h0(filt)
-    diagrams[0] = h0.diagram()
-    stats["t_h0"] = time.perf_counter() - t0
+    from ..analyze.invariants import sanitizing
 
-    if maxdim >= 1:
+    with sanitizing(sanitize) as san:
         t0 = time.perf_counter()
-        adapter1 = make_h1_adapter(filt, sparse=sparse)
-        cols1 = np.arange(filt.n_e - 1, -1, -1, dtype=np.int64)
-        res1 = _reduce(adapter1, cols1, mode=mode, cleared=h0.death_edges)
-        diagrams[1] = res1.diagram()
-        stats["t_h1"] = time.perf_counter() - t0
-        for k, v in res1.stats.items():
-            stats[f"h1_{k}"] = v
-    else:
-        res1 = None
+        h0 = compute_h0(filt)
+        diagrams[0] = h0.diagram()
+        stats["t_h0"] = time.perf_counter() - t0
 
-    if maxdim >= 2:
-        t0 = time.perf_counter()
-        adapter2 = make_h2_adapter(filt, sparse=sparse)
-        cols2 = h2_columns(filt, res1.pivot_lows, sparse=sparse,
-                           memory_budget_bytes=memory_budget_bytes)
-        res2 = _reduce(adapter2, cols2, mode=mode)
-        diagrams[2] = res2.diagram()
-        stats["t_h2"] = time.perf_counter() - t0
-        for k, v in res2.stats.items():
-            stats[f"h2_{k}"] = v
+        if maxdim >= 1:
+            t0 = time.perf_counter()
+            if san is not None:
+                san.set_context(dim=1)
+            adapter1 = make_h1_adapter(filt, sparse=sparse)
+            cols1 = np.arange(filt.n_e - 1, -1, -1, dtype=np.int64)
+            res1 = _reduce(adapter1, cols1, mode=mode, cleared=h0.death_edges)
+            diagrams[1] = res1.diagram()
+            stats["t_h1"] = time.perf_counter() - t0
+            for k, v in res1.stats.items():
+                stats[f"h1_{k}"] = v
+        else:
+            res1 = None
+
+        if maxdim >= 2:
+            t0 = time.perf_counter()
+            if san is not None:
+                san.set_context(dim=2)
+            adapter2 = make_h2_adapter(filt, sparse=sparse)
+            cols2 = h2_columns(filt, res1.pivot_lows, sparse=sparse,
+                               memory_budget_bytes=memory_budget_bytes)
+            res2 = _reduce(adapter2, cols2, mode=mode)
+            diagrams[2] = res2.diagram()
+            stats["t_h2"] = time.perf_counter() - t0
+            for k, v in res2.stats.items():
+                stats[f"h2_{k}"] = v
+        if san is not None:
+            stats["sanitize_checks"] = float(sum(san.counts.values()))
+            san.set_context(dim=None)
 
     return PHResult(diagrams=diagrams, stats=stats)

@@ -88,10 +88,12 @@ pivot across the whole reduction).
 """
 from __future__ import annotations
 
+import functools
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
+from ..analyze.invariants import active_sanitizer
 from ..kernels.gf2 import (NO_LOW, find_low_np, scatter_bits,
                            scatter_xor_bits, set_bit_positions,
                            stack_wire_payloads, unstack_wire_payloads)
@@ -217,6 +219,7 @@ class _PackedBatch:
         if len(self.segs) == 1:
             return
         self.n_consolidations += 1
+        san = active_sanitizer()
         if self.cache is not None:
             self.cache.bump_epoch()   # re-ranking invalidates cached positions
         ridx_all, keys_all = [], []
@@ -224,6 +227,11 @@ class _PackedBatch:
             w = _words(len(seg), self.use_kernels)
             ridx, pos, _ = set_bit_positions(self.block[:, off:off + w])
             keep = pos < len(seg)
+            if san is not None:
+                # the keep filter below silently drops any bit past the
+                # segment universe — under the sanitizer that is a lost
+                # GF(2) coordinate, not slack
+                san.check_segment_bits(pos, len(seg))
             ridx_all.append(ridx[keep])
             keys_all.append(seg[pos[keep]])
         ridx = np.concatenate(ridx_all)
@@ -239,6 +247,9 @@ class _PackedBatch:
         pos = np.searchsorted(universe, keys)
         order = np.lexsort((pos, ridx))
         scatter_bits(self.block, ridx[order], pos[order])
+        if san is not None:
+            san.check_consolidation(ridx, keys, universe,
+                                    self.block[:, :self.r_words])
 
     def _abs_positions(self, keys: np.ndarray
                        ) -> Tuple[np.ndarray, np.ndarray]:
@@ -302,6 +313,7 @@ class _PackedBatch:
                 if pad:
                     sub = np.vstack(
                         [sub, np.zeros((pad, w), dtype=np.uint32)])
+                # analyze: allow[host-sync] lows gate the host serial pass; one bucketed sync per segment is the schedule
                 lb = np.asarray(gf2_find_low(jnp.asarray(sub)))[:len(rows)]
             else:
                 lb = find_low_np(sub)
@@ -673,6 +685,16 @@ def _resolve_reduce_shards(mesh, n_shards: Optional[int]) -> int:
     return 1 if n_shards is None else int(n_shards)
 
 
+def _exchange_round_fn(x, axis_name: str):
+    """Per-device body of one pivot-exchange round: block ``(1, L)`` in,
+    every shard's ``(P, L)`` out.  Module-level (closed only over the
+    static ``axis_name``) so ``repro.analyze.collectives`` can trace its
+    collective schedule without building the mesh driver."""
+    import jax
+
+    return jax.lax.all_gather(x[0], axis_name)
+
+
 def _make_exchange(mesh, n_shards: int):
     """Pivot-exchange round: per-shard wire payloads -> all shards' payloads.
 
@@ -697,11 +719,9 @@ def _make_exchange(mesh, n_shards: int):
         buf, lens = stack_wire_payloads(payloads)
         L = buf.shape[1]
         if L not in fns:
-            def round_fn(x):
-                # per-device block (1, L); gather -> (P, L) on every device
-                return jax.lax.all_gather(x[0], axis)
             fns[L] = jax.jit(jax.shard_map(
-                round_fn, mesh=mesh, in_specs=in_spec, out_specs=out_spec,
+                functools.partial(_exchange_round_fn, axis_name=axis),
+                mesh=mesh, in_specs=in_spec, out_specs=out_spec,
                 check_vma=False))
         return unstack_wire_payloads(fns[L](jnp.asarray(buf)), lens)
 
@@ -754,6 +774,7 @@ def reduce_dimension_packed(
     """
     import time
 
+    san = active_sanitizer()
     use_kernels = _resolve_use_kernels(use_kernels)
     P = _resolve_reduce_shards(mesh, n_shards)
     if exchange_every < 1:
@@ -821,6 +842,9 @@ def reduce_dimension_packed(
         n_slices = len(slice_sizes)
         B = len(ids_arr)
         ids_int = [int(i) for i in ids_arr]
+        if san is not None:
+            san.set_context(superstep=n_supersteps,
+                            batch=f"{start}:{pos}")
         gens: List[Dict[int, int]] = [dict() for _ in range(B)]
         # per-shard busy accounting: fused block ops split by row share,
         # per-slice work timed to its slice, sync parts at full cost
@@ -910,6 +934,8 @@ def reduce_dimension_packed(
         deps: List[set] = [set() for _ in range(max(n_slices, 1))]
         for k in range(n_slices):
             t0 = time.perf_counter()
+            if san is not None:
+                san.set_context(slice=k)
             s0, s1 = int(bounds[k]), int(bounds[k + 1])
             rows = np.arange(s0, s1)
             sids = ids_arr[s0:s1]
@@ -1033,6 +1059,8 @@ def reduce_dimension_packed(
             shard_logs = [[] for _ in range(P)]
             pending.clear()
 
+    if san is not None:
+        san.set_context(superstep=None, batch=None, slice=None)
     pair_arr = np.array([(b, d) for b, d, _ in pairs if d > b],
                         dtype=np.float64).reshape(-1, 2)
     pivot_lows = np.array([low for _, _, low in pairs], dtype=np.int64)

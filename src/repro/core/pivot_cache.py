@@ -33,9 +33,11 @@ unit of the distributed engine:
 from __future__ import annotations
 
 from collections import OrderedDict
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence
 
 import numpy as np
+
+from ..analyze.invariants import active_sanitizer
 
 __all__ = ["PackedPivotCache", "encode_commit_delta", "decode_commit_delta"]
 
@@ -102,6 +104,11 @@ class PackedPivotCache:
         if low in self._columns:
             return
         keys = np.ascontiguousarray(keys, dtype=np.int64)
+        san = active_sanitizer()
+        if san is not None:
+            # memoized R columns must be canonical (strictly increasing):
+            # the cache serves every later consumer of this low verbatim
+            san.check_canonical_column(keys)
         self._columns[low] = keys
         self._col_bytes += keys.nbytes
         if self.budget_bytes is not None:
@@ -168,13 +175,19 @@ def encode_commit_delta(records: Sequence[dict]) -> np.ndarray:
                     else np.sort(np.ascontiguousarray(g, dtype=np.int64)))
     body = pack_column_payload(cols + gens)
     header = np.array([_DELTA_MAGIC, n, body.size, 0], dtype=np.uint32)
-    return np.concatenate([
+    payload = np.concatenate([
         header,
         lows.view(np.uint32) if n else np.zeros(0, dtype=np.uint32),
         ids.view(np.uint32) if n else np.zeros(0, dtype=np.uint32),
         modes,
         body,
     ])
+    san = active_sanitizer()
+    if san is not None:
+        # the replica installs exactly what decodes: check the round-trip
+        # before the payload crosses the wire
+        san.check_wire_roundtrip(records, payload, decode_commit_delta)
+    return payload
 
 
 def decode_commit_delta(payload: np.ndarray) -> List[dict]:

@@ -298,6 +298,7 @@ def iter_tile_edges(
             yield _harvest_masked_tile(lens_tile, si, sj, tau_max,
                                        _upper_mask(si, ei, sj, ej), stats)
         elif backend == "pallas":
+            # analyze: allow[host-sync] one gather per tile is the streaming contract; the f64 refine consumes it on host
             d2_32 = np.asarray(pairwise_sq_dists(
                 pts32[si:ei], pts32[sj:ej], interpret=interpret))
             yield _refine_f32_tile(d2_32, points, sq, si, ei, sj, ej,

@@ -1,0 +1,13 @@
+"""Negative fixture: f32 candidate compared against the exact threshold.
+
+``d2_32`` is f32-tainted (assigned through ``astype(np.float32)``) and
+must be compared against the margin-widened f32 threshold, never the
+exact ``tau_max``.  Never imported; linted as text.
+"""
+import numpy as np
+
+
+def harvest(d2, tau_max):
+    d2_32 = d2.astype(np.float32)
+    keep = d2_32 <= tau_max * tau_max     # BAD: exact-threshold compare
+    return keep

@@ -1,0 +1,24 @@
+"""Negative fixture: host↔device syncs inside a hot loop.
+
+# analyze: hot
+
+The marker above opts this file into the ``host-sync`` rule the same way
+the real superstep/harvest modules are.  Never imported; linted as text.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+step = jax.jit(lambda x: x * 2.0)
+
+
+def hot_loop(xs):
+    total = 0.0
+    for x in xs:
+        y = step(x)
+        total += y.sum().item()          # BAD: one sync per iteration
+        host = np.asarray(step(x))       # BAD: host gather of device fn
+        jax.device_get(y)                # BAD: device round-trip
+        y.block_until_ready()            # BAD: serializes dispatch
+        _ = host
+    return total

@@ -1,0 +1,22 @@
+"""Negative fixture: Pallas Ref store inside a fori_loop body.
+
+The store ``acc_ref[...] = ...`` is issued from the nested loop-body
+function, so interpret-mode discharge silently drops it — the exact bug
+class ``pallas-ref-mutation`` exists to catch.  This file is never
+imported; it is linted as text by tests/test_analyze.py.
+"""
+import jax
+import jax.numpy as jnp
+
+
+def bad_kernel(x_ref, acc_ref):
+    def body(i, carry):
+        acc_ref[i] = x_ref[i] * 2.0   # BAD: store in nested trace scope
+        acc_ref[i] += carry           # BAD: aug-store in nested trace scope
+        return carry + 1
+
+    jax.lax.fori_loop(0, x_ref.shape[0], body, 0)
+
+
+def good_kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...] * 2.0     # fine: top-level store

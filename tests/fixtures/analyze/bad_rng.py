@@ -1,0 +1,15 @@
+"""Negative fixture: unseeded RNG in a benchmark-style script.
+
+Never imported; linted as text by tests/test_analyze.py (with
+``force=True`` standing in for living under benchmarks/).
+"""
+import random
+
+import numpy as np
+
+
+def sample_points(n):
+    pts = np.random.rand(n, 3)           # BAD: legacy global RNG
+    rng = np.random.default_rng()        # BAD: unseeded generator
+    jitter = random.random()             # BAD: stdlib global state
+    return pts + rng.normal(size=(n, 3)) * jitter

@@ -1,0 +1,15 @@
+"""Negative fixture: raw sorts on filtration values.
+
+Edge lengths sorted without the canonical ``(length, i, j)`` tie-break
+make diagrams schedule-dependent on ties.  Never imported; linted as
+text by tests/test_analyze.py.
+"""
+import numpy as np
+
+
+def order_edges(edge_lens, rows, cols):
+    order = np.argsort(edge_lens)             # BAD: no tie-break
+    ranked = sorted(edge_lens)                # BAD: raw sorted()
+    short = np.lexsort((rows, edge_lens))     # BAD: 2-key lexsort
+    good = np.lexsort((cols, rows, edge_lens))   # fine: full tie-break
+    return order, ranked, short, good

@@ -1,0 +1,59 @@
+"""Scoped strict type check: the analysis layer must stay mypy-clean.
+
+Run from the repo root (CI does):
+
+    python tools/check_types.py
+
+Runs ``mypy --strict`` over the modules whose contracts are load-bearing
+for correctness tooling — ``src/repro/analyze/`` (the checker must not
+itself be sloppier than what it checks) and ``src/repro/core/
+pivot_cache.py`` (the replication codec the analyzer verifies).  Imports
+*into* the rest of the untyped tree are followed permissively
+(``--ignore-missing-imports`` + per-run ``--follow-imports=silent``) so
+the scope stays exactly these files.
+
+Skips gracefully (exit 0 with a notice) when mypy is not installed —
+the container image does not bake it in; CI installs it from
+requirements-dev.txt.
+"""
+from __future__ import annotations
+
+import os
+import shutil
+import subprocess
+import sys
+
+SCOPE = (
+    os.path.join("src", "repro", "analyze"),
+    os.path.join("src", "repro", "core", "pivot_cache.py"),
+)
+
+MYPY_ARGS = (
+    "--strict",
+    "--follow-imports=silent",
+    "--ignore-missing-imports",
+    "--no-error-summary",
+)
+
+
+def main() -> int:
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    if shutil.which("mypy") is None:
+        try:
+            import mypy  # noqa: F401
+        except ImportError:
+            print("check_types: mypy not installed; skipping "
+                  "(CI installs it from requirements-dev.txt)")
+            return 0
+    cmd = [sys.executable, "-m", "mypy", *MYPY_ARGS,
+           *(os.path.join(root, p) for p in SCOPE)]
+    env = dict(os.environ)
+    env["MYPYPATH"] = os.path.join(root, "src")
+    proc = subprocess.run(cmd, cwd=root, env=env)
+    if proc.returncode == 0:
+        print(f"check_types: mypy --strict clean over {len(SCOPE)} scope(s)")
+    return proc.returncode
+
+
+if __name__ == "__main__":
+    sys.exit(main())
