@@ -110,6 +110,14 @@ def run(n: int, seed: int, batch_size: int, maxdim: int = 2) -> dict:
                 "n_reductions": int(n_red),
                 "reductions_per_s": round(n_red / max(red_t, 1e-9), 1),
                 "stored_bytes": int(s.get("h2_stored_bytes", 0)),
+                # per-phase span breakdown (docs/observability.md;
+                # schema-checked by tools/check_bench_schema.py)
+                "phases": {
+                    "filtration": round(s.get("t_filtration", 0.0), 4),
+                    "h0": round(s.get("t_h0", 0.0), 4),
+                    "h1": round(s.get("t_h1", 0.0), 4),
+                    "h2": round(s.get("t_h2", 0.0), 4),
+                },
             }
             if engine == "packed":
                 for k in PACKED_COUNTERS:
@@ -175,6 +183,12 @@ def run_distributed(record: dict, dists, shards: list, batch_size: int,
                 "sim_sweep_s": round(_summed(s, "sim_sweep_s"), 4),
                 "sim_sync_s": round(_summed(s, "sim_sync_s"), 4),
                 "t_total_s": round(wall, 4),
+                # the sim_wall_s decomposition as the per-phase breakdown
+                "phases": {
+                    "conc": round(_summed(s, "sim_conc_s"), 4),
+                    "sweep": round(_summed(s, "sim_sweep_s"), 4),
+                    "sync": round(_summed(s, "sim_sync_s"), 4),
+                },
             }
             for k in DIST_COUNTERS:
                 entry[k] = int(_summed(s, k))

@@ -69,6 +69,9 @@ def run(n: int, budget_mb: float, tile: int, maxdim: int, seed: int,
     res = compute_ph(filtration=filt, maxdim=maxdim)
     t_ph = time.perf_counter() - t0
 
+    from repro.scale import account_bytes
+    predicted = account_bytes(filt.n, filt.n_e)
+
     record = {
         "benchmark": "scale_smoke",
         "dataset": "torus4",
@@ -88,6 +91,18 @@ def run(n: int, budget_mb: float, tile: int, maxdim: int, seed: int,
         "t_budget_s": round(t_budget, 4),
         "t_filtration_s": round(t_filtration, 4),
         "t_ph_s": round(t_ph, 4),
+        # per-phase breakdown (docs/observability.md; schema-checked by
+        # tools/check_bench_schema.py) + observed-vs-predicted memory
+        "phases": {
+            "budget": round(t_budget, 4),
+            "filtration": round(t_filtration, 4),
+            "ph": round(t_ph, 4),
+        },
+        "predicted_account_bytes": int(predicted),
+        "observed_peak_harvest_bytes": int(stats.peak_extra_bytes()),
+        "budget_drift_ratio": round(
+            (filt.base_memory_bytes() + stats.peak_extra_bytes())
+            / max(predicted, 1.0), 3),
         "n_pairs": {str(d): int(len(pd)) for d, pd in res.diagrams.items()},
     }
     if devices > 1:

@@ -5,11 +5,11 @@ slots one token per step.
     PYTHONPATH=src python examples/serve_batch.py [--requests 12]
 """
 import argparse
-import time
 
 import numpy as np
 
 from repro.configs import get_config
+from repro.obs.trace import stopwatch
 from repro.serve.engine import Request, ServeEngine
 
 
@@ -24,19 +24,17 @@ def main() -> None:
     engine = ServeEngine(cfg, max_batch=args.max_batch, prompt_len=16,
                          s_max=64)
     rng = np.random.default_rng(0)
-    t_submit = {}
     for uid in range(args.requests):
         prompt = rng.integers(0, cfg.vocab_size, size=int(rng.integers(4, 16)),
                               dtype=np.int32)
         engine.submit(Request(uid=uid, prompt=prompt, max_new=args.max_new))
-        t_submit[uid] = time.perf_counter()
 
-    t0 = time.perf_counter()
     steps = 0
-    while engine.queue or any(s is not None for s in engine._slots):
-        engine.step()
-        steps += 1
-    wall = time.perf_counter() - t0
+    with stopwatch("serve/run") as sw:
+        while engine.queue or any(s is not None for s in engine._slots):
+            engine.step()
+            steps += 1
+    wall = sw.elapsed
 
     done = engine.done
     total = sum(len(v) for v in done.values())
@@ -45,6 +43,10 @@ def main() -> None:
     assert len(done) == args.requests
     for uid in sorted(done)[:3]:
         print(f"  req {uid:2d} -> {done[uid]}")
+    stats = engine.stats()
+    print(f"engine stats: {stats['serve_n_prefills']:.0f} prefills, "
+          f"{stats['serve_n_decode_steps']:.0f} decode steps, "
+          f"{stats['serve_tokens_per_request_sum']:.0f} tokens total")
     print("OK: all requests completed through batched prefill+decode.")
 
 

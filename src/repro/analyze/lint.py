@@ -25,6 +25,15 @@ code review away from hitting):
 * ``unseeded-rng`` — benchmarks and examples must use
   ``np.random.default_rng(seed)``; legacy global or unseeded RNG makes
   perf and diagram numbers irreproducible.
+* ``raw-timing`` — ad-hoc ``time.time()`` / ``time.perf_counter()``
+  pairs outside ``repro/obs/`` and ``benchmarks/`` bypass the tracer:
+  the measurement never lands in the span timeline or the BENCH JSON
+  phase breakdown.  Use :func:`repro.obs.trace.stopwatch` (always
+  yields ``.elapsed``, records a span when tracing is active).
+* ``span-leak`` — ``span(...)`` / ``stopwatch(...)`` must be used as a
+  ``with`` context item (or via the ``traced()`` decorator).  A bare
+  call creates a context manager that is never entered/exited, so the
+  span silently never closes — especially on exception paths.
 
 Deliberate exceptions are suppressed in place with a *justified* pragma
 on the offending line (or the line above)::
@@ -50,6 +59,8 @@ __all__ = [
     "RawFiltrationSortRule",
     "DtypeBoundaryRule",
     "UnseededRngRule",
+    "RawTimingRule",
+    "SpanLeakRule",
     "default_rules",
     "lint_source",
     "lint_file",
@@ -459,9 +470,106 @@ class UnseededRngRule(Rule):
         return findings
 
 
+class RawTimingRule(Rule):
+    """Timing must flow through the tracer, not ad-hoc clock reads.
+
+    Flags ``time.time()``, ``time.perf_counter()``,
+    ``time.perf_counter_ns()`` and ``time.process_time()`` — via the
+    module attribute or imported bare (``from time import
+    perf_counter``) — everywhere except ``repro/obs/`` (which owns the
+    one blessed clock) and ``benchmarks/`` (whose wall-clock gates are
+    the measurement itself, not a phase to attribute).
+    ``time.monotonic`` (deadline arithmetic) and ``time.sleep`` are
+    deliberately not timing measurements and stay legal.
+    """
+
+    name = "raw-timing"
+    _CLOCKS = ("time", "perf_counter", "perf_counter_ns", "process_time")
+
+    def applies(self, relpath: str, source: str) -> bool:
+        posix = relpath.replace(os.sep, "/")
+        if posix.startswith("benchmarks/") or "/benchmarks/" in posix:
+            return False
+        return "repro/obs/" not in posix
+
+    def check(self, tree: ast.Module, source: str,
+              relpath: str) -> List[Finding]:
+        imported = self._imported_clocks(tree)
+        findings: List[Finding] = []
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.Call):
+                continue
+            clock = self._clock_name(node.func, imported)
+            if clock is not None:
+                findings.append(self._finding(
+                    relpath, node,
+                    f"raw clock read time.{clock}() bypasses the tracer; "
+                    "use repro.obs.trace.stopwatch(name) so the interval "
+                    "lands in the span timeline"))
+        return findings
+
+    def _clock_name(self, func: ast.AST,
+                    imported: Set[str]) -> Optional[str]:
+        chain = self._attr_chain(func)
+        if len(chain) == 2 and chain[0] == "time" and \
+                chain[1] in self._CLOCKS:
+            return chain[1]
+        if isinstance(func, ast.Name) and func.id in imported:
+            return func.id
+        return None
+
+    def _imported_clocks(self, tree: ast.Module) -> Set[str]:
+        names: Set[str] = set()
+        for node in ast.walk(tree):
+            if isinstance(node, ast.ImportFrom) and node.module == "time":
+                names.update(a.asname or a.name for a in node.names
+                             if a.name in self._CLOCKS)
+        return names
+
+
+class SpanLeakRule(Rule):
+    """Every opened span must close — even on the exception path.
+
+    A ``span(...)`` / ``stopwatch(...)`` call (bare or as a
+    ``Tracer``-method ``tl.span(...)``) that is not a ``with`` context
+    item produces a context manager that is never entered: the span
+    never records, or — worse — an explicit ``__enter__`` without the
+    guarded ``__exit__`` leaks an open span when the body raises.  The
+    ``with`` statement is the only form whose exit runs on exceptions.
+    """
+
+    name = "span-leak"
+    _OPENERS = ("span", "stopwatch")
+
+    def applies(self, relpath: str, source: str) -> bool:
+        return "repro/obs/" not in relpath.replace(os.sep, "/")
+
+    def check(self, tree: ast.Module, source: str,
+              relpath: str) -> List[Finding]:
+        with_items: Set[int] = set()
+        for node in ast.walk(tree):
+            if isinstance(node, (ast.With, ast.AsyncWith)):
+                with_items.update(id(item.context_expr)
+                                  for item in node.items)
+        findings: List[Finding] = []
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.Call) or id(node) in with_items:
+                continue
+            chain = self._attr_chain(node.func)
+            if chain[-1:] and chain[-1] in self._OPENERS:
+                findings.append(self._finding(
+                    relpath, node,
+                    f"{chain[-1]}(...) not used as a `with` item; the span "
+                    "never closes on the exception path — write "
+                    f"`with {chain[-1]}(...):` (or use the traced() "
+                    "decorator)"))
+        return findings
+
+
 def default_rules() -> List[Rule]:
     return [RefMutationRule(), HostSyncRule(), RawFiltrationSortRule(),
-            DtypeBoundaryRule(), UnseededRngRule()]
+            DtypeBoundaryRule(), UnseededRngRule(), RawTimingRule(),
+            SpanLeakRule()]
 
 
 _ALLOW = re.compile(

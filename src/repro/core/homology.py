@@ -9,11 +9,12 @@ trivial pairs detected on the fly throughout.
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Dict, Optional
 
 import numpy as np
 
+from ..obs.metrics import MetricsRegistry
+from ..obs.trace import span, stopwatch, tracing
 from . import coboundary as cb
 from .filtration import Filtration, build_filtration
 from .h0 import compute_h0
@@ -143,6 +144,7 @@ def compute_ph(
     n_shards: Optional[int] = None,
     exchange_every: int = 4,
     sanitize: Optional[bool] = None,
+    trace=None,
 ) -> PHResult:
     """Persistent homology up to ``maxdim`` (<= 2), Dory pipeline.
 
@@ -186,8 +188,17 @@ def compute_ph(
     equality) that raise a structured ``SanitizeViolation`` instead of
     returning a silently wrong diagram.  ``None`` (default) defers to the
     ``REPRO_SANITIZE`` environment variable; ``False`` forces it off.
+    trace: phase-scoped tracing (:mod:`repro.obs`) for this call — a path
+    string exports a Perfetto-loadable Chrome trace there on return (the
+    packed distributed path renders its shards as parallel device lanes);
+    a :class:`~repro.obs.trace.Tracer` collects without exporting.
+    ``None`` (default) defers to the ``REPRO_TRACE`` environment variable
+    (a path, accumulated across calls); ``False`` forces it off.  The
+    returned ``stats`` are built on the :mod:`repro.obs.metrics` registry
+    schema either way, including the byte-account gauges
+    (``predicted_account_bytes`` vs the ``observed_peak_*_bytes``
+    high-water marks).
     """
-    stats: Dict[str, float] = {}
     if mesh is not None and engine != "packed" \
             and (filtration is not None or backend != "tiled"):
         raise ValueError("mesh sharding requires backend='tiled' and no "
@@ -196,111 +207,145 @@ def compute_ph(
     if n_shards is not None and engine != "packed":
         raise ValueError("n_shards distributes the reduction and requires "
                          "engine='packed'")
-    t0 = time.perf_counter()
-    if filtration is not None:
-        filt = filtration
-    elif backend == "tiled":
-        from ..scale import (build_filtration_sharded, build_filtration_tiled,
-                             estimate_tau_max, shard_of_mesh)
-
-        harvest_shards = shard_of_mesh(mesh)[1] if mesh is not None else 1
-        if memory_budget_bytes is not None and not np.isfinite(tau_max):
-            if points is None:
-                raise ValueError(
-                    "memory_budget_bytes needs points to estimate tau_max")
-            tau_max = estimate_tau_max(points, memory_budget_bytes,
-                                       n_shards=harvest_shards,
-                                       tile_m=tile_m, tile_n=tile_n)
-            stats["tau_max_estimated"] = float(tau_max)
-        if mesh is not None:
-            filt, tile_stats = build_filtration_sharded(
-                points=points, dists=dists, tau_max=tau_max,
-                tile_m=tile_m, tile_n=tile_n, mesh=mesh, return_stats=True)
-            stats["n_shards"] = float(tile_stats.n_shards)
-            stats["per_device_peak_bytes"] = float(
-                tile_stats.per_device_peak_bytes())
-            stats["per_device_base_bytes"] = float(
-                tile_stats.per_device_base_bytes())
-        else:
-            filt = build_filtration_tiled(points=points, dists=dists,
-                                          tau_max=tau_max,
-                                          tile_m=tile_m, tile_n=tile_n)
-    elif backend == "dense":
-        filt = build_filtration(points=points, dists=dists, tau_max=tau_max)
-    else:
-        raise ValueError(f"unknown backend {backend!r}")
-    stats["t_filtration"] = time.perf_counter() - t0
-    stats["n"] = float(filt.n)
-    stats["n_e"] = float(filt.n_e)
-    stats["base_memory_bytes"] = float(filt.base_memory_bytes())
-    if sparse is None:
-        sparse = (not filt.has_dense_order) or filt.n > 1024
-    if engine == "batch":
-        from .serial_parallel import reduce_dimension_batched
-
-        def _reduce(adapter, cols, mode=mode, cleared=None):
-            return reduce_dimension_batched(adapter, cols, mode=mode,
-                                            cleared=cleared,
-                                            batch_size=batch_size,
-                                            store_budget_bytes=memory_budget_bytes)
-    elif engine == "packed":
-        from .packed_reduce import reduce_dimension_packed
-
-        def _reduce(adapter, cols, mode=mode, cleared=None):
-            # one pivot cache per dimension (created inside the call): H1
-            # and H2 lows live in different key spaces, so a shared cache
-            # across dimensions could alias numerically equal keys
-            return reduce_dimension_packed(adapter, cols, mode=mode,
-                                           cleared=cleared,
-                                           batch_size=batch_size,
-                                           store_budget_bytes=memory_budget_bytes,
-                                           n_shards=n_shards, mesh=mesh,
-                                           exchange_every=exchange_every)
-    elif engine == "single":
-        def _reduce(adapter, cols, mode=mode, cleared=None):
-            return reduce_dimension(adapter, cols, mode=mode, cleared=cleared,
-                                    store_budget_bytes=memory_budget_bytes)
-    else:
-        raise ValueError(f"unknown engine {engine!r}")
-
+    reg = MetricsRegistry()
+    tile_stats = None
+    res1 = res2 = None
     diagrams: Dict[int, np.ndarray] = {}
 
     from ..analyze.invariants import sanitizing
 
-    with sanitizing(sanitize) as san:
-        t0 = time.perf_counter()
-        h0 = compute_h0(filt)
-        diagrams[0] = h0.diagram()
-        stats["t_h0"] = time.perf_counter() - t0
+    with tracing(trace), span("ph/compute_ph", engine=engine, mode=mode,
+                              maxdim=maxdim):
+        with stopwatch("ph/filtration") as sw_filt:
+            if filtration is not None:
+                filt = filtration
+            elif backend == "tiled":
+                from ..scale import (build_filtration_sharded,
+                                     build_filtration_tiled,
+                                     estimate_tau_max, shard_of_mesh)
 
-        if maxdim >= 1:
-            t0 = time.perf_counter()
-            if san is not None:
-                san.set_context(dim=1)
-            adapter1 = make_h1_adapter(filt, sparse=sparse)
-            cols1 = np.arange(filt.n_e - 1, -1, -1, dtype=np.int64)
-            res1 = _reduce(adapter1, cols1, mode=mode, cleared=h0.death_edges)
-            diagrams[1] = res1.diagram()
-            stats["t_h1"] = time.perf_counter() - t0
-            for k, v in res1.stats.items():
-                stats[f"h1_{k}"] = v
+                harvest_shards = \
+                    shard_of_mesh(mesh)[1] if mesh is not None else 1
+                if memory_budget_bytes is not None \
+                        and not np.isfinite(tau_max):
+                    if points is None:
+                        raise ValueError("memory_budget_bytes needs points "
+                                         "to estimate tau_max")
+                    tau_max = estimate_tau_max(points, memory_budget_bytes,
+                                               n_shards=harvest_shards,
+                                               tile_m=tile_m, tile_n=tile_n)
+                    reg.gauge("tau_max_estimated").set(float(tau_max))
+                if mesh is not None:
+                    filt, tile_stats = build_filtration_sharded(
+                        points=points, dists=dists, tau_max=tau_max,
+                        tile_m=tile_m, tile_n=tile_n, mesh=mesh,
+                        return_stats=True)
+                    reg.gauge("n_shards").set(float(tile_stats.n_shards))
+                    reg.gauge("per_device_peak_bytes").set(
+                        float(tile_stats.per_device_peak_bytes()))
+                    reg.gauge("per_device_base_bytes").set(
+                        float(tile_stats.per_device_base_bytes()))
+                else:
+                    filt, tile_stats = build_filtration_tiled(
+                        points=points, dists=dists, tau_max=tau_max,
+                        tile_m=tile_m, tile_n=tile_n, return_stats=True)
+            elif backend == "dense":
+                filt = build_filtration(points=points, dists=dists,
+                                        tau_max=tau_max)
+            else:
+                raise ValueError(f"unknown backend {backend!r}")
+        reg.gauge("t_filtration").set(sw_filt.elapsed)
+        reg.gauge("n").set(float(filt.n))
+        reg.gauge("n_e").set(float(filt.n_e))
+        reg.gauge("base_memory_bytes").set(float(filt.base_memory_bytes()))
+        if sparse is None:
+            sparse = (not filt.has_dense_order) or filt.n > 1024
+        if engine == "batch":
+            from .serial_parallel import reduce_dimension_batched
+
+            def _reduce(adapter, cols, mode=mode, cleared=None):
+                return reduce_dimension_batched(
+                    adapter, cols, mode=mode, cleared=cleared,
+                    batch_size=batch_size,
+                    store_budget_bytes=memory_budget_bytes)
+        elif engine == "packed":
+            from .packed_reduce import reduce_dimension_packed
+
+            def _reduce(adapter, cols, mode=mode, cleared=None):
+                # one pivot cache per dimension (created inside the call):
+                # H1 and H2 lows live in different key spaces, so a shared
+                # cache across dimensions could alias numerically equal keys
+                return reduce_dimension_packed(
+                    adapter, cols, mode=mode, cleared=cleared,
+                    batch_size=batch_size,
+                    store_budget_bytes=memory_budget_bytes,
+                    n_shards=n_shards, mesh=mesh,
+                    exchange_every=exchange_every)
+        elif engine == "single":
+            def _reduce(adapter, cols, mode=mode, cleared=None):
+                return reduce_dimension(adapter, cols, mode=mode,
+                                        cleared=cleared,
+                                        store_budget_bytes=memory_budget_bytes)
         else:
-            res1 = None
+            raise ValueError(f"unknown engine {engine!r}")
 
-        if maxdim >= 2:
-            t0 = time.perf_counter()
+        with sanitizing(sanitize) as san:
+            with stopwatch("ph/h0") as sw:
+                h0 = compute_h0(filt)
+                diagrams[0] = h0.diagram()
+            reg.gauge("t_h0").set(sw.elapsed)
+
+            if maxdim >= 1:
+                with stopwatch("ph/h1") as sw:
+                    if san is not None:
+                        san.set_context(dim=1)
+                    adapter1 = make_h1_adapter(filt, sparse=sparse)
+                    cols1 = np.arange(filt.n_e - 1, -1, -1, dtype=np.int64)
+                    res1 = _reduce(adapter1, cols1, mode=mode,
+                                   cleared=h0.death_edges)
+                    diagrams[1] = res1.diagram()
+                reg.gauge("t_h1").set(sw.elapsed)
+
+            if maxdim >= 2:
+                with stopwatch("ph/h2") as sw:
+                    if san is not None:
+                        san.set_context(dim=2)
+                    adapter2 = make_h2_adapter(filt, sparse=sparse)
+                    cols2 = h2_columns(filt, res1.pivot_lows, sparse=sparse,
+                                       memory_budget_bytes=memory_budget_bytes)
+                    res2 = _reduce(adapter2, cols2, mode=mode)
+                    diagrams[2] = res2.diagram()
+                reg.gauge("t_h2").set(sw.elapsed)
             if san is not None:
-                san.set_context(dim=2)
-            adapter2 = make_h2_adapter(filt, sparse=sparse)
-            cols2 = h2_columns(filt, res1.pivot_lows, sparse=sparse,
-                               memory_budget_bytes=memory_budget_bytes)
-            res2 = _reduce(adapter2, cols2, mode=mode)
-            diagrams[2] = res2.diagram()
-            stats["t_h2"] = time.perf_counter() - t0
-            for k, v in res2.stats.items():
-                stats[f"h2_{k}"] = v
-        if san is not None:
-            stats["sanitize_checks"] = float(sum(san.counts.values()))
-            san.set_context(dim=None)
+                reg.counter("sanitize_checks").inc(sum(san.counts.values()))
+                san.set_context(dim=None)
 
+        # memory observability: the observed harvest/reduction high-water
+        # marks next to the predicted (3n + 12 n_e) * 4 account, so
+        # budget-model drift is a measurable, testable quantity
+        from ..scale.budget import account_bytes
+
+        predicted = float(account_bytes(filt.n, filt.n_e))
+        reg.gauge("predicted_account_bytes").set(predicted)
+        obs_harvest = 0.0
+        if tile_stats is not None:
+            obs_harvest = float(tile_stats.peak_extra_bytes())
+            reg.gauge("observed_peak_harvest_bytes").record_max(obs_harvest)
+        obs_reduce = 0.0
+        for res in (res1, res2):
+            if res is not None:
+                obs_reduce = max(
+                    obs_reduce,
+                    res.stats.get("stored_bytes", 0.0)
+                    + res.stats.get("peak_block_bytes", 0.0))
+        reg.gauge("observed_peak_reduce_bytes").record_max(obs_reduce)
+        base = float(filt.base_memory_bytes())
+        reg.gauge("budget_drift_ratio").set(
+            (base + max(obs_harvest, obs_reduce)) / max(predicted, 1.0))
+
+    stats: Dict[str, float] = reg.as_stats()
+    for prefix, res in (("h1", res1), ("h2", res2)):
+        if res is not None:
+            for k, v in res.stats.items():
+                stats[f"{prefix}_{k}"] = v
     return PHResult(diagrams=diagrams, stats=stats)

@@ -97,6 +97,8 @@ from ..analyze.invariants import active_sanitizer
 from ..kernels.gf2 import (NO_LOW, find_low_np, scatter_bits,
                            scatter_xor_bits, set_bit_positions,
                            stack_wire_payloads, unstack_wire_payloads)
+from ..obs.metrics import MetricsRegistry
+from ..obs.trace import Tracer, active_tracer, critical_path
 from .pairing import EMPTY_KEY
 from .reduction import (DimensionAdapter, PivotStore, ReductionResult,
                         clearance_commit, clearing_filter, merge_cancel)
@@ -771,10 +773,19 @@ def reduce_dimension_packed(
     parts at full cost (tournament, the in-order commit sweep, decode +
     install, which every device performs on all P payloads).  For P == 1
     the same accounting reproduces the measured wall.
-    """
-    import time
 
+    Every timed region is a span on a local, always-on tracer — each phase
+    carries its lane (shard) and superstep, so a run under
+    ``compute_ph(trace=...)`` renders as P parallel device lanes — and
+    ``sim_wall_s`` is *derived* from that span timeline
+    (:func:`repro.obs.trace.critical_path`); the legacy hand-rolled
+    accounting is kept only as ``sim_wall_bookkeeping_s`` so the two can be
+    cross-checked (``tests/test_obs.py`` asserts they agree at P = 4).
+    """
     san = active_sanitizer()
+    # local timeline: always on (sim_wall is derived from it), forwarding
+    # into the user's tracer when compute_ph(trace=...) activated one
+    tl = Tracer(forward_to=active_tracer())
     use_kernels = _resolve_use_kernels(use_kernels)
     P = _resolve_reduce_shards(mesh, n_shards)
     if exchange_every < 1:
@@ -812,10 +823,11 @@ def reduce_dimension_packed(
     n_sweep_probes = 0
     exchange_bytes = 0
     peak_block_bytes = 0
-    sim_wall = 0.0
-    sim_conc = 0.0     # concurrent phase: max over shards per superstep
-    sim_sweep = 0.0    # commit sweep: critical path over the dep DAG
-    sim_sync = 0.0     # tournament + exchange rounds
+    # hand-rolled critical-path wall, kept ONLY to cross-check the
+    # span-derived accounting (emitted as sim_wall_bookkeeping_s); the
+    # reported sim_* stats come from critical_path(tl.spans) below
+    sim_wall_book = 0.0
+    reg = MetricsRegistry()
     queue = clearing_filter(column_ids, cleared)
     eff_batch = batch_size
     if len(queue):
@@ -846,42 +858,46 @@ def reduce_dimension_packed(
             san.set_context(superstep=n_supersteps,
                             batch=f"{start}:{pos}")
         gens: List[Dict[int, int]] = [dict() for _ in range(B)]
-        # per-shard busy accounting: fused block ops split by row share,
-        # per-slice work timed to its slice, sync parts at full cost
+        # per-shard busy accounting, span-encoded (obs.trace.critical_path):
+        # fused block ops split by row share (the ``weights`` attr),
+        # per-slice work on its own device lane, sync parts at full cost
+        wt = tuple(float(sz) / max(B, 1) for sz in slice_sizes)
+        step = n_supersteps
         t_fused = 0.0
         t_slice = np.zeros(max(n_slices, 1))
         t_seq = 0.0
-        t0 = time.perf_counter()
-        cob = adapter.cobdy(ids_arr)
+        with tl.span("reduce/fused", step=step, weights=wt) as sp:
+            cob = adapter.cobdy(ids_arr)
 
-        # seed the bit-space with the first round of addends so the common
-        # case packs exactly once; the concurrent phase probes the replica
-        # (P > 1) — complete up to the last exchange round — or the store
-        lows0 = np.where(cob[:, 0] == EMPTY_KEY, np.int64(-1), cob[:, 0])
-        addends, owners, owner_gens = \
-            lookup_store.lookup_addends_batched(lows0, ids_arr)
-        addend_lows = lows0
-        batchblk = _PackedBatch(
-            cob, [a for a in addends if a is not None], use_kernels,
-            cache=cache)
-        t_fused += time.perf_counter() - t0
+            # seed the bit-space with the first round of addends so the
+            # common case packs exactly once; the concurrent phase probes
+            # the replica (P > 1) — complete up to the last exchange
+            # round — or the store
+            lows0 = np.where(cob[:, 0] == EMPTY_KEY, np.int64(-1), cob[:, 0])
+            addends, owners, owner_gens = \
+                lookup_store.lookup_addends_batched(lows0, ids_arr)
+            addend_lows = lows0
+            batchblk = _PackedBatch(
+                cob, [a for a in addends if a is not None], use_kernels,
+                cache=cache)
+        t_fused += sp.dur
 
         probe = np.zeros(B, dtype=bool)   # rows whose low moved since probe
         while True:
-            t0 = time.perf_counter()
-            hit = [i for i in range(B) if addends[i] is not None]
-            if hit:
-                n_rounds += 1
-                n_reductions += len(hit)
-                for i in hit:
-                    o = int(owners[i])
-                    gens[i][o] = gens[i].get(o, 0) + 1
-                    for g in owner_gens[i]:
-                        g = int(g)
-                        gens[i][g] = gens[i].get(g, 0) + 1
-                batchblk.xor_addends(hit, addends, addend_lows)
-                probe[hit] = batchblk.lows[hit] >= 0
-            t_fused += time.perf_counter() - t0
+            with tl.span("reduce/fused", step=step, weights=wt) as sp:
+                hit = [i for i in range(B) if addends[i] is not None]
+                if hit:
+                    n_rounds += 1
+                    n_reductions += len(hit)
+                    for i in hit:
+                        o = int(owners[i])
+                        gens[i][o] = gens[i].get(o, 0) + 1
+                        for g in owner_gens[i]:
+                            g = int(g)
+                            gens[i][g] = gens[i].get(g, 0) + 1
+                    batchblk.xor_addends(hit, addends, addend_lows)
+                    probe[hit] = batchblk.lows[hit] >= 0
+            t_fused += sp.dur
 
             # intra-slice collisions -> per-slice serial pass in filtration
             # order (the whole block is one slice when P == 1)
@@ -890,32 +906,32 @@ def reduce_dimension_packed(
                 sl_lows = batchblk.lows[s0:s1]
                 nz = sl_lows[sl_lows >= 0]
                 if len(np.unique(nz)) != len(nz):
-                    t0 = time.perf_counter()
-                    rows = None if n_slices == 1 else np.arange(s0, s1)
-                    n_red, changed = batchblk.serial_pass(gens, ids_int,
-                                                          rows=rows)
-                    n_reductions += n_red
-                    probe[changed] = batchblk.lows[changed] >= 0
-                    t_slice[k] += time.perf_counter() - t0
+                    with tl.span("reduce/slice", lane=k, step=step) as sp:
+                        rows = None if n_slices == 1 else np.arange(s0, s1)
+                        n_red, changed = batchblk.serial_pass(gens, ids_int,
+                                                              rows=rows)
+                        n_reductions += n_red
+                        probe[changed] = batchblk.lows[changed] >= 0
+                    t_slice[k] += sp.dur
 
             if not probe.any() and n_slices > 1:
-                t0 = time.perf_counter()
-                n_red, changed = _tournament_merge(batchblk, gens, ids_int,
-                                                   bounds)
-                n_reductions += n_red
-                n_tournament_reductions += n_red
-                probe[changed] = batchblk.lows[changed] >= 0
-                t_seq += time.perf_counter() - t0
+                with tl.span("reduce/tournament", step=step) as sp:
+                    n_red, changed = _tournament_merge(batchblk, gens,
+                                                       ids_int, bounds)
+                    n_reductions += n_red
+                    n_tournament_reductions += n_red
+                    probe[changed] = batchblk.lows[changed] >= 0
+                t_seq += sp.dur
 
             if not probe.any():
                 break
-            t0 = time.perf_counter()
-            probe_lows = np.where(probe, batchblk.lows, -1)
-            probe[:] = False
-            addends, owners, owner_gens = \
-                lookup_store.lookup_addends_batched(probe_lows, ids_arr)
-            addend_lows = probe_lows
-            t_fused += time.perf_counter() - t0
+            with tl.span("reduce/fused", step=step, weights=wt) as sp:
+                probe_lows = np.where(probe, batchblk.lows, -1)
+                probe[:] = False
+                addends, owners, owner_gens = \
+                    lookup_store.lookup_addends_batched(probe_lows, ids_arr)
+                addend_lows = probe_lows
+            t_fused += sp.dur
 
         # ---- exact commit sweep, slice by slice in global batch order:
         # re-probe the *authoritative* store until stable, then
@@ -933,93 +949,96 @@ def reduce_dimension_packed(
         t_sweep = np.zeros(max(n_slices, 1))
         deps: List[set] = [set() for _ in range(max(n_slices, 1))]
         for k in range(n_slices):
-            t0 = time.perf_counter()
-            if san is not None:
-                san.set_context(slice=k)
-            s0, s1 = int(bounds[k]), int(bounds[k + 1])
-            rows = np.arange(s0, s1)
-            sids = ids_arr[s0:s1]
-            if P > 1:
-                pending_arr = np.fromiter(pending, dtype=np.int64,
-                                          count=len(pending))
-                dirty = np.zeros(len(sids), dtype=bool)
-                while True:
-                    sl_lows = batchblk.lows[s0:s1].copy()
-                    cand = dirty.copy()
-                    if pending_arr.size:
-                        cand |= np.isin(sl_lows, pending_arr)
-                    cand &= sl_lows >= 0
-                    if not cand.any():
-                        break
-                    sl_lows[~cand] = -1
-                    n_sweep_probes += 1
-                    adds, owns, ogens = \
-                        store.lookup_addends_batched(sl_lows, sids)
-                    dirty[:] = False
-                    hit_local = [i for i in range(len(sids))
-                                 if adds[i] is not None]
-                    if hit_local:
-                        n_rounds += 1
-                        n_reductions += len(hit_local)
-                        for i in hit_local:
-                            c = s0 + i
-                            o = int(owns[i])
-                            gens[c][o] = gens[c].get(o, 0) + 1
-                            for g in ogens[i]:
-                                g = int(g)
-                                gens[c][g] = gens[c].get(g, 0) + 1
-                            src = pending.get(int(sl_lows[i]))
-                            if src is not None and src[1] == n_supersteps:
-                                deps[k].add(src[0])
-                        full_adds: List[Optional[np.ndarray]] = [None] * B
-                        full_lows = np.full(B, -1, dtype=np.int64)
-                        for i in hit_local:
-                            full_adds[s0 + i] = adds[i]
-                            full_lows[s0 + i] = sl_lows[i]
-                        batchblk.xor_addends([s0 + i for i in hit_local],
-                                             full_adds, full_lows)
-                        dirty[hit_local] = True
-                    cur = batchblk.lows[s0:s1]
-                    nz = cur[cur >= 0]
-                    if len(np.unique(nz)) != len(nz):
-                        n_red, changed = batchblk.serial_pass(
-                            gens, ids_int, rows=rows)
-                        n_reductions += n_red
-                        dirty[changed - s0] = True
-                    dirty &= batchblk.lows[s0:s1] >= 0
+            with tl.span("reduce/sweep", lane=k, step=step) as sw_sp:
+                if san is not None:
+                    san.set_context(slice=k)
+                s0, s1 = int(bounds[k]), int(bounds[k + 1])
+                rows = np.arange(s0, s1)
+                sids = ids_arr[s0:s1]
+                if P > 1:
+                    pending_arr = np.fromiter(pending, dtype=np.int64,
+                                              count=len(pending))
+                    dirty = np.zeros(len(sids), dtype=bool)
+                    while True:
+                        sl_lows = batchblk.lows[s0:s1].copy()
+                        cand = dirty.copy()
+                        if pending_arr.size:
+                            cand |= np.isin(sl_lows, pending_arr)
+                        cand &= sl_lows >= 0
+                        if not cand.any():
+                            break
+                        sl_lows[~cand] = -1
+                        n_sweep_probes += 1
+                        adds, owns, ogens = \
+                            store.lookup_addends_batched(sl_lows, sids)
+                        dirty[:] = False
+                        hit_local = [i for i in range(len(sids))
+                                     if adds[i] is not None]
+                        if hit_local:
+                            n_rounds += 1
+                            n_reductions += len(hit_local)
+                            for i in hit_local:
+                                c = s0 + i
+                                o = int(owns[i])
+                                gens[c][o] = gens[c].get(o, 0) + 1
+                                for g in ogens[i]:
+                                    g = int(g)
+                                    gens[c][g] = gens[c].get(g, 0) + 1
+                                src = pending.get(int(sl_lows[i]))
+                                if src is not None \
+                                        and src[1] == n_supersteps:
+                                    deps[k].add(src[0])
+                            full_adds: List[Optional[np.ndarray]] = [None] * B
+                            full_lows = np.full(B, -1, dtype=np.int64)
+                            for i in hit_local:
+                                full_adds[s0 + i] = adds[i]
+                                full_lows[s0 + i] = sl_lows[i]
+                            batchblk.xor_addends([s0 + i for i in hit_local],
+                                                 full_adds, full_lows)
+                            dirty[hit_local] = True
+                        cur = batchblk.lows[s0:s1]
+                        nz = cur[cur >= 0]
+                        if len(np.unique(nz)) != len(nz):
+                            n_red, changed = batchblk.serial_pass(
+                                gens, ids_int, rows=rows)
+                            n_reductions += n_red
+                            dirty[changed - s0] = True
+                        dirty &= batchblk.lows[s0:s1] >= 0
 
-            log_mark = len(commit_log) if commit_log is not None else 0
-            clearance_commit(
-                store, adapter, sids, batchblk.lows[s0:s1],
-                gens[s0:s1],
-                lambda rr, rows=rows: batchblk.unpack(
-                    rows[np.asarray(rr, dtype=np.int64)]),
-                pairs, essentials)
-            if commit_log is not None and len(commit_log) > log_mark:
-                # drain this slice's commits straight into its shard's wire
-                # backlog; their lows are pending until the next exchange.
-                # With gens untracked (explicit, no budget) neither side of
-                # the wire ever reads a δ-expansion — don't ship them
-                fresh = commit_log[log_mark:]
-                if not store.track_gens:
+                log_mark = len(commit_log) if commit_log is not None else 0
+                clearance_commit(
+                    store, adapter, sids, batchblk.lows[s0:s1],
+                    gens[s0:s1],
+                    lambda rr, rows=rows: batchblk.unpack(
+                        rows[np.asarray(rr, dtype=np.int64)]),
+                    pairs, essentials)
+                if commit_log is not None and len(commit_log) > log_mark:
+                    # drain this slice's commits straight into its shard's
+                    # wire backlog; their lows are pending until the next
+                    # exchange.  With gens untracked (explicit, no budget)
+                    # neither side of the wire ever reads a δ-expansion —
+                    # don't ship them
+                    fresh = commit_log[log_mark:]
+                    if not store.track_gens:
+                        for r in fresh:
+                            r["gens"] = None
+                    shard_logs[k].extend(fresh)
                     for r in fresh:
-                        r["gens"] = None
-                shard_logs[k].extend(fresh)
-                for r in fresh:
-                    pending[r["low"]] = (k, n_supersteps)
-                del commit_log[log_mark:]
-            t_sweep[k] += time.perf_counter() - t0
+                        pending[r["low"]] = (k, n_supersteps)
+                    del commit_log[log_mark:]
+                # the dep DAG is known only now — amend the span so the
+                # timeline alone reconstructs the sweep critical path
+                sw_sp.set(deps=tuple(sorted(deps[k])))
+            t_sweep[k] += sw_sp.dur
 
         # critical path over the sweep DAG: finish(k) = t_sweep[k] +
         # max finish over the slices k absorbed from (deps point strictly
         # backward, so one forward pass is the longest-path DP)
         finish = np.zeros(max(n_slices, 1))
         for k in range(n_slices):
-            start = max((finish[d] for d in deps[k]), default=0.0)
-            finish[k] = start + t_sweep[k]
+            dep_finish = max((finish[d] for d in deps[k]), default=0.0)
+            finish[k] = dep_finish + t_sweep[k]
         sweep_cp = float(finish[:max(n_slices, 1)].max()) if n_slices else 0.0
-        sim_sweep += sweep_cp
-        sim_sync += t_seq
         t_seq += sweep_cp
 
         peak_block_bytes = max(peak_block_bytes, batchblk.peak_bytes)
@@ -1027,9 +1046,10 @@ def reduce_dimension_packed(
         n_expansions += batchblk.n_expansions
         n_evictions += batchblk.n_evictions
 
-        frac = np.asarray(slice_sizes, dtype=np.float64) / max(B, 1)
-        sim_conc += float(np.max(t_fused * frac + t_slice[:n_slices]))
-        sim_wall += float(np.max(t_fused * frac + t_slice[:n_slices])) + t_seq
+        frac = np.asarray(wt, dtype=np.float64)
+        step_conc = float(np.max(t_fused * frac + t_slice[:n_slices]))
+        reg.histogram("superstep_conc_s").observe(step_conc)
+        sim_wall_book += step_conc + t_seq
 
         # ---- pivot exchange (every ``exchange_every`` supersteps, and
         # skipped once the queue is drained — the replica is never read
@@ -1044,18 +1064,19 @@ def reduce_dimension_packed(
             t_enc = np.zeros(P)
             payloads = []
             for k in range(P):
-                t0 = time.perf_counter()
-                payloads.append(encode_commit_delta(shard_logs[k]))
-                t_enc[k] = time.perf_counter() - t0
-            exchange_bytes += sum(p.nbytes for p in payloads)
-            t0 = time.perf_counter()
-            for payload in exchange(payloads):
-                for rec in decode_commit_delta(payload):
-                    replica.install(rec["low"], rec["col_id"], rec["mode"],
-                                    rec["column"], rec["gens"])
-            t_exch = float(t_enc.max()) + (time.perf_counter() - t0)
-            sim_wall += t_exch
-            sim_sync += t_exch
+                with tl.span("reduce/encode", lane=k, step=step) as sp:
+                    payloads.append(encode_commit_delta(shard_logs[k]))
+                t_enc[k] = sp.dur
+            wire = sum(p.nbytes for p in payloads)
+            exchange_bytes += wire
+            with tl.span("reduce/exchange", step=step,
+                         bytes=int(wire)) as sp:
+                for payload in exchange(payloads):
+                    for rec in decode_commit_delta(payload):
+                        replica.install(rec["low"], rec["col_id"],
+                                        rec["mode"], rec["column"],
+                                        rec["gens"])
+            sim_wall_book += float(t_enc.max()) + sp.dur
             shard_logs = [[] for _ in range(P)]
             pending.clear()
 
@@ -1064,33 +1085,34 @@ def reduce_dimension_packed(
     pair_arr = np.array([(b, d) for b, d, _ in pairs if d > b],
                         dtype=np.float64).reshape(-1, 2)
     pivot_lows = np.array([low for _, _, low in pairs], dtype=np.int64)
-    stats = {
-        "n_columns": float(len(queue)),
-        "n_reductions": float(n_reductions),
-        "n_pairs": float(len(pairs)),
-        "n_essential": float(len(essentials)),
-        "stored_bytes": float(store.bytes_stored),
-        "n_stored_columns": float(len(store.columns)),
-        "n_spilled": float(store.n_spilled),
-        "batch_size": float(eff_batch),
-        "n_rounds": float(n_rounds),
-        "n_expansions": float(n_expansions),
-        "n_evictions": float(n_evictions),
-        "n_consolidations": float(n_consolidations),
-        "peak_block_bytes": float(peak_block_bytes),
-        "use_kernels": float(use_kernels),
-        "n_shards": float(P),
-        "n_supersteps": float(n_supersteps),
-        "n_exchange_rounds": float(n_exchange_rounds),
-        "n_tournament_reductions": float(n_tournament_reductions),
-        "n_sweep_probes": float(n_sweep_probes),
-        "exchange_bytes": float(exchange_bytes),
-        "sim_wall_s": float(sim_wall),
-        "sim_conc_s": float(sim_conc),
-        "sim_sweep_s": float(sim_sweep),
-        "sim_sync_s": float(sim_sync),
-    }
-    stats.update({k: float(v) for k, v in cache.stats().items()})
+    # the reported sim walls are DERIVED from the span timeline — the
+    # bookkeeping above survives only as its cross-check
+    cp = critical_path(tl.spans)
+    reg.counter("n_columns").inc(len(queue))
+    reg.counter("n_reductions").inc(n_reductions)
+    reg.counter("n_pairs").inc(len(pairs))
+    reg.counter("n_essential").inc(len(essentials))
+    reg.gauge("stored_bytes").set(store.bytes_stored)
+    reg.gauge("n_stored_columns").set(len(store.columns))
+    reg.counter("n_spilled").inc(store.n_spilled)
+    reg.gauge("batch_size").set(eff_batch)
+    reg.counter("n_rounds").inc(n_rounds)
+    reg.counter("n_expansions").inc(n_expansions)
+    reg.counter("n_evictions").inc(n_evictions)
+    reg.counter("n_consolidations").inc(n_consolidations)
+    reg.gauge("peak_block_bytes").record_max(peak_block_bytes)
+    reg.gauge("use_kernels").set(float(use_kernels))
+    reg.gauge("n_shards").set(P)
+    reg.counter("n_supersteps").inc(n_supersteps)
+    reg.counter("n_exchange_rounds").inc(n_exchange_rounds)
+    reg.counter("n_tournament_reductions").inc(n_tournament_reductions)
+    reg.counter("n_sweep_probes").inc(n_sweep_probes)
+    reg.counter("exchange_bytes").inc(exchange_bytes)
+    for key, val in cp.items():
+        reg.gauge(key).set(val)
+    reg.gauge("sim_wall_bookkeeping_s").set(sim_wall_book)
+    reg.update_from(cache.stats())
+    stats = reg.as_stats()
     return ReductionResult(
         pairs=pair_arr,
         essentials=np.array(essentials, dtype=np.float64),

@@ -38,6 +38,7 @@ from typing import Dict, List, Optional, Sequence
 import numpy as np
 
 from ..analyze.invariants import active_sanitizer
+from ..obs.metrics import MetricsRegistry
 
 __all__ = ["PackedPivotCache", "encode_commit_delta", "decode_commit_delta"]
 
@@ -128,15 +129,17 @@ class PackedPivotCache:
     def column_bytes(self) -> int:
         return self._col_bytes
 
-    def stats(self) -> Dict[str, int]:
-        return {
-            "cache_n_packs": self.n_packs,
-            "cache_n_pack_hits": self.n_pack_hits,
-            "cache_n_materializations": self.n_materializations,
-            "cache_n_mat_hits": self.n_mat_hits,
-            "cache_n_col_evictions": self.n_col_evictions,
-            "cache_column_bytes": self._col_bytes,
-        }
+    def stats(self) -> Dict[str, float]:
+        """Cache counters through the typed registry (repro.obs.metrics),
+        so the emitted keys stay schema-checked."""
+        reg = MetricsRegistry()
+        reg.counter("cache_n_packs").inc(self.n_packs)
+        reg.counter("cache_n_pack_hits").inc(self.n_pack_hits)
+        reg.counter("cache_n_materializations").inc(self.n_materializations)
+        reg.counter("cache_n_mat_hits").inc(self.n_mat_hits)
+        reg.counter("cache_n_col_evictions").inc(self.n_col_evictions)
+        reg.gauge("cache_column_bytes").set(self._col_bytes)
+        return reg.as_stats()
 
 
 # ---------------------------------------------------------------------------

@@ -30,6 +30,8 @@ from typing import Callable, Dict, List, Optional, Tuple
 import numpy as np
 
 from ..analyze.invariants import active_sanitizer
+from ..obs.metrics import MetricsRegistry
+from ..obs.trace import span
 from .pairing import EMPTY_KEY
 
 
@@ -234,8 +236,10 @@ class PivotStore:
             for item in planned:
                 heapq.heappush(self._explicit_heap, item)
             return False
-        for _, idx in planned:
-            self._demote(idx)
+        if planned:
+            with span("reduce/spill", n=len(planned), freed_bytes=freed):
+                for _, idx in planned:
+                    self._demote(idx)
         return True
 
     def commit(self, low: int, col_id: int, r: np.ndarray, gens: np.ndarray,
@@ -511,17 +515,17 @@ def reduce_dimension(
                         dtype=np.float64).reshape(-1, 2)
     pivot_lows = np.array([low for _, _, low in pairs], dtype=np.int64)
     ess_arr = np.array(essentials, dtype=np.float64)
+    reg = MetricsRegistry()
+    reg.counter("n_columns").inc(n_columns_in)
+    reg.counter("n_reductions").inc(n_reductions)
+    reg.counter("n_pairs").inc(len(pairs))
+    reg.counter("n_essential").inc(len(essentials))
+    reg.gauge("stored_bytes").set(store.bytes_stored)
+    reg.gauge("n_stored_columns").set(len(store.columns))
+    reg.counter("n_spilled").inc(store.n_spilled)
     result = ReductionResult(
         pairs=pair_arr, essentials=ess_arr, pivot_lows=pivot_lows,
-        stats={
-            "n_columns": float(n_columns_in),
-            "n_reductions": float(n_reductions),
-            "n_pairs": float(len(pairs)),
-            "n_essential": float(len(essentials)),
-            "stored_bytes": float(store.bytes_stored),
-            "n_stored_columns": float(len(store.columns)),
-            "n_spilled": float(store.n_spilled),
-        },
+        stats=reg.as_stats(),
     )
     if return_store:
         return result, store

@@ -25,6 +25,8 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
+from ..obs.metrics import MetricsRegistry
+from ..obs.trace import span
 from .pairing import EMPTY_KEY
 from .reduction import (DimensionAdapter, PivotStore, ReductionResult,
                         clearance_commit, clearing_filter, merge_cancel,
@@ -84,51 +86,54 @@ def reduce_dimension_batched(
         empty = [False] * B
 
         # ---- parallel phase ----
-        for i in range(B):
-            rs[i], n_adds = _reduce_vs_store(store, adapter, rs[i],
-                                             int(ids[i]), gens[i])
-            n_reductions += n_adds
+        with span("reduce/parallel", batch=s // batch_size, n=B):
+            for i in range(B):
+                rs[i], n_adds = _reduce_vs_store(store, adapter, rs[i],
+                                                 int(ids[i]), gens[i])
+                n_reductions += n_adds
 
         # ---- serial phase (in filtration order within the batch) ----
         # marked columns are final and hold pairwise-distinct lows, so one
         # low -> batch-index dict replaces the former O(B^2) linear scan
         # for a marked mate with the same low
         marked_low_to_j: Dict[int, int] = {}
-        for i in range(B):
-            r = rs[i]
-            while True:
-                if r.size == 0:
-                    empty[i] = True
-                    break
-                low = int(r[0])
-                addend = store.lookup_addend(low, int(ids[i]))
-                if addend is not None:
-                    owner = self_owner_of(store, adapter, low)
-                    gens[i][owner] = gens[i].get(owner, 0) + 1
-                    for g in store_gens(store, low):
-                        gens[i][int(g)] = gens[i].get(int(g), 0) + 1
-                    r = merge_cancel(r, addend)
+        with span("reduce/serial", batch=s // batch_size):
+            for i in range(B):
+                r = rs[i]
+                while True:
+                    if r.size == 0:
+                        empty[i] = True
+                        break
+                    low = int(r[0])
+                    addend = store.lookup_addend(low, int(ids[i]))
+                    if addend is not None:
+                        owner = self_owner_of(store, adapter, low)
+                        gens[i][owner] = gens[i].get(owner, 0) + 1
+                        for g in store_gens(store, low):
+                            gens[i][int(g)] = gens[i].get(int(g), 0) + 1
+                        r = merge_cancel(r, addend)
+                        n_reductions += 1
+                        continue
+                    j = marked_low_to_j.get(low)
+                    if j is None:
+                        marked[i] = True
+                        marked_low_to_j[low] = i
+                        break
+                    jid = int(ids[j])
+                    gens[i][jid] = gens[i].get(jid, 0) + 1
+                    for g, p in gens[j].items():
+                        gens[i][g] = gens[i].get(g, 0) + p
+                    r = merge_cancel(r, rs[j])
                     n_reductions += 1
-                    continue
-                j = marked_low_to_j.get(low)
-                if j is None:
-                    marked[i] = True
-                    marked_low_to_j[low] = i
-                    break
-                jid = int(ids[j])
-                gens[i][jid] = gens[i].get(jid, 0) + 1
-                for g, p in gens[j].items():
-                    gens[i][g] = gens[i].get(g, 0) + p
-                r = merge_cancel(r, rs[j])
-                n_reductions += 1
-            rs[i] = r
+                rs[i] = r
 
         # ---- clearance: commit the whole batch (batched value lookups) ----
-        lows = np.array([int(rs[i][0]) if rs[i].size else -1
-                         for i in range(B)], dtype=np.int64)
-        clearance_commit(store, adapter, ids, lows, gens,
-                         lambda rows: [rs[int(i)] for i in rows],
-                         pairs, essentials)
+        with span("reduce/commit", batch=s // batch_size):
+            lows = np.array([int(rs[i][0]) if rs[i].size else -1
+                             for i in range(B)], dtype=np.int64)
+            clearance_commit(store, adapter, ids, lows, gens,
+                             lambda rows: [rs[int(i)] for i in rows],
+                             pairs, essentials)
 
     pair_arr = np.array([(b, d) for b, d, _ in pairs if d > b],
                         dtype=np.float64).reshape(-1, 2)
@@ -137,14 +142,21 @@ def reduce_dimension_batched(
         pairs=pair_arr,
         essentials=np.array(essentials, dtype=np.float64),
         pivot_lows=pivot_lows,
-        stats={
-            "n_columns": float(len(queue)),
-            "n_reductions": float(n_reductions),
-            "n_pairs": float(len(pairs)),
-            "n_essential": float(len(essentials)),
-            "stored_bytes": float(store.bytes_stored),
-            "n_stored_columns": float(len(store.columns)),
-            "n_spilled": float(store.n_spilled),
-            "batch_size": float(batch_size),
-        },
+        stats=_final_stats(store, queue, pairs, essentials, n_reductions,
+                           batch_size),
     )
+
+
+def _final_stats(store: PivotStore, queue, pairs, essentials,
+                 n_reductions: int, batch_size: int) -> Dict[str, float]:
+    """Engine stats through the typed registry (schema: repro.obs.metrics)."""
+    reg = MetricsRegistry()
+    reg.counter("n_columns").inc(len(queue))
+    reg.counter("n_reductions").inc(n_reductions)
+    reg.counter("n_pairs").inc(len(pairs))
+    reg.counter("n_essential").inc(len(essentials))
+    reg.gauge("stored_bytes").set(store.bytes_stored)
+    reg.gauge("n_stored_columns").set(len(store.columns))
+    reg.counter("n_spilled").inc(store.n_spilled)
+    reg.gauge("batch_size").set(batch_size)
+    return reg.as_stats()

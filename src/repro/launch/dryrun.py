@@ -38,6 +38,8 @@ import time
 import traceback
 from typing import Any, Dict, Optional
 
+from repro.obs.trace import stopwatch
+
 # TPU v5e roofline constants (task spec)
 PEAK_FLOPS = 197e12        # bf16 FLOP/s per chip
 HBM_BW = 819e9             # bytes/s per chip
@@ -86,18 +88,18 @@ def run_cell(arch: str, shape: str, mesh_kind: str,
     chips = mesh.devices.size
     pod_size = 256 if mesh_kind == "multi" else chips
 
-    t0 = time.time()
-    cell = build_cell(arch, shape, mesh, overrides=overrides)
-    with mesh:
-        jitted = jax.jit(cell.fn,
-                         in_shardings=cell.in_shardings,
-                         out_shardings=cell.out_shardings,
-                         donate_argnums=cell.donate_argnums)
-        lowered = jitted.lower(*cell.args)
-        t_lower = time.time() - t0
-        t0 = time.time()
+    with stopwatch("dryrun/lower") as sw_lower:
+        cell = build_cell(arch, shape, mesh, overrides=overrides)
+        with mesh:
+            jitted = jax.jit(cell.fn,
+                             in_shardings=cell.in_shardings,
+                             out_shardings=cell.out_shardings,
+                             donate_argnums=cell.donate_argnums)
+            lowered = jitted.lower(*cell.args)
+    with mesh, stopwatch("dryrun/compile") as sw_compile:
         compiled = lowered.compile()
-        t_compile = time.time() - t0
+    t_lower = sw_lower.elapsed
+    t_compile = sw_compile.elapsed
 
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis() or {}
@@ -208,13 +210,12 @@ def run_ph_cell(shape: str, mesh_kind: str,
     pivot_keys = jax.ShapeDtypeStruct((n_piv,), np.int64)
     pivot_cols = jax.ShapeDtypeStruct((n_piv, w), np.int64)
 
-    t0 = time.time()
-    with mesh:
+    with stopwatch("dryrun/lower") as sw_lower, mesh:
         lowered = jax.jit(round_fn).lower(cols, pivot_keys, pivot_cols)
-        t_lower = time.time() - t0
-        t0 = time.time()
+    with mesh, stopwatch("dryrun/compile") as sw_compile:
         compiled = lowered.compile()
-        t_compile = time.time() - t0
+    t_lower = sw_lower.elapsed
+    t_compile = sw_compile.elapsed
     mem = compiled.memory_analysis()
     hlo_text = compiled.as_text()
     parsed = analyze_module(hlo_text, pod_size=pod_size)

@@ -8,11 +8,11 @@ Usage::
 from __future__ import annotations
 
 import argparse
-import time
 
 import numpy as np
 
 from repro.configs import get_config
+from repro.obs.trace import stopwatch
 from repro.serve.engine import Request, ServeEngine
 
 
@@ -38,9 +38,9 @@ def main() -> None:
                               dtype=np.int32)
         engine.submit(Request(uid=uid, prompt=prompt, max_new=args.max_new))
 
-    t0 = time.perf_counter()
-    done = engine.run()
-    wall = time.perf_counter() - t0
+    with stopwatch("serve/run") as sw:
+        done = engine.run()
+    wall = sw.elapsed
     total_tokens = sum(len(v) for v in done.values())
     print(f"served {len(done)}/{args.requests} requests, "
           f"{total_tokens} tokens in {wall:.2f}s "

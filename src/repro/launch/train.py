@@ -21,7 +21,6 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import json
-import time
 from typing import Any, Dict, Optional
 
 import jax
@@ -36,6 +35,7 @@ from repro.dist.sharding import (activation_rules, batch_specs,
                                  shardings_from_specs)
 from repro.launch.mesh import make_mesh
 from repro.models.config import ModelConfig
+from repro.obs.trace import stopwatch
 from repro.train.optimizer import AdamW, warmup_cosine
 from repro.train.train_step import (TrainState, init_train_state,
                                     make_train_step)
@@ -136,29 +136,29 @@ def run(job: TrainJob, restore: bool = False) -> Dict[str, Any]:
                                 global_batch=job.global_batch,
                                 seq=job.seq_len + 1, seed=job.seed)
     history = []
-    t_start = time.perf_counter()
-    for step in range(start_step, job.steps):
-        batch_np = stream.batch_at(step)
-        batch = {k: jnp.asarray(v) for k, v in batch_np.items()}
-        if mesh is not None:
-            with mesh:
+    with stopwatch("train/steps") as sw_wall:
+        for step in range(start_step, job.steps):
+            batch_np = stream.batch_at(step)
+            batch = {k: jnp.asarray(v) for k, v in batch_np.items()}
+            if mesh is not None:
+                with mesh:
+                    state, metrics = jstep(state, batch)
+            else:
                 state, metrics = jstep(state, batch)
-        else:
-            state, metrics = jstep(state, batch)
-        if step % job.log_every == 0 or step == job.steps - 1:
-            m = {k: float(v) for k, v in metrics.items()}
-            m["step"] = step
-            if job.tda_every and step % job.tda_every == 0:
-                m.update(tda_monitor(state.params, cfg, batch_np))
-            history.append(m)
-            print(json.dumps({k: round(v, 5) if isinstance(v, float) else v
-                              for k, v in m.items()}))
-        if ckpt is not None and step and step % job.ckpt_every == 0:
-            ckpt.save_async(step, state, metadata={"step": step})
-    if ckpt is not None:
-        ckpt.save(job.steps - 1, state, metadata={"step": job.steps - 1})
-        ckpt.wait()
-    wall = time.perf_counter() - t_start
+            if step % job.log_every == 0 or step == job.steps - 1:
+                m = {k: float(v) for k, v in metrics.items()}
+                m["step"] = step
+                if job.tda_every and step % job.tda_every == 0:
+                    m.update(tda_monitor(state.params, cfg, batch_np))
+                history.append(m)
+                print(json.dumps({k: round(v, 5) if isinstance(v, float) else v
+                                  for k, v in m.items()}))
+            if ckpt is not None and step and step % job.ckpt_every == 0:
+                ckpt.save_async(step, state, metadata={"step": step})
+        if ckpt is not None:
+            ckpt.save(job.steps - 1, state, metadata={"step": job.steps - 1})
+            ckpt.wait()
+    wall = sw_wall.elapsed
     return {"history": history, "state": state, "wall_s": wall,
             "final_loss": history[-1]["loss"] if history else float("nan")}
 

@@ -11,7 +11,8 @@ distance input (``sparse_input``).  Entry via ``build_filtration_tiled`` /
 See ``docs/architecture.md`` for the end-to-end pipeline walk and
 ``docs/api.md`` for the reference of this surface.
 """
-from .budget import (edge_budget, estimate_tau_max, landmark_points,
+from .budget import (account_bytes, edge_budget, estimate_tau_max,
+                     landmark_points,
                      maxmin_landmarks, sample_pair_lengths,
                      sharded_edge_budget, tile_transient_bytes)
 from .shard import (build_filtration_sharded, harvest_edges_sharded,
@@ -26,7 +27,8 @@ __all__ = [
     "merge_edge_chunks", "tile_grid",
     "build_filtration_sharded", "harvest_edges_sharded", "partition_tiles",
     "shard_of_mesh",
-    "edge_budget", "estimate_tau_max", "maxmin_landmarks", "landmark_points",
+    "account_bytes", "edge_budget", "estimate_tau_max", "maxmin_landmarks",
+    "landmark_points",
     "sample_pair_lengths", "sharded_edge_budget", "tile_transient_bytes",
     "build_filtration_coo", "contacts_to_distances", "coo_symmetrize",
 ]

@@ -20,8 +20,19 @@ import numpy as np
 from ..core.filtration import pair_sq_dists
 
 
+def account_bytes(n: int, n_e: int) -> int:
+    """The paper's predicted base account: ``(3 n + 12 n_e) * 4`` bytes.
+
+    This is the *model* side of the budget story; ``compute_ph`` records it
+    as the ``predicted_account_bytes`` gauge next to the observed
+    harvest/reduction high-water marks so budget-model drift is a
+    measurable quantity (see ``docs/observability.md``).
+    """
+    return (3 * int(n) + 12 * int(n_e)) * 4
+
+
 def edge_budget(n: int, memory_budget_bytes: int) -> int:
-    """Largest ``n_e`` with ``(3n + 12 n_e) * 4 <= memory_budget_bytes``."""
+    """Largest ``n_e`` with ``account_bytes(n, n_e) <= memory_budget_bytes``."""
     return max(0, (int(memory_budget_bytes) // 4 - 3 * n) // 12)
 
 

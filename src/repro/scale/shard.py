@@ -41,6 +41,7 @@ from typing import List, Optional, Tuple
 import numpy as np
 
 from ..core.filtration import filtration_from_edges
+from ..obs.trace import span
 from .tiles import (DEFAULT_TILE, TileStats, _f32_dists_threshold,
                     _f32_threshold, _refine_f32_dists_tile, _refine_f32_tile,
                     _resolve_backend, iter_tile_edges, merge_edge_chunks,
@@ -84,17 +85,21 @@ def _harvest_shards_host(points, dists, shards, tau_max, tile_m, tile_n,
     bit-identity contract cannot drift.  Fragment bytes tracked per shard.
     """
     ii, jj, ll = chunks
-    for shard in shards:
+    for k, shard in enumerate(shards):
         shard_bytes = 0
-        for iu, ju, lens in iter_tile_edges(points=points, dists=dists,
-                                            tau_max=tau_max, tile_m=tile_m,
-                                            tile_n=tile_n, backend=backend,
-                                            interpret=interpret, stats=stats,
-                                            tiles=shard):
-            ii.append(iu.astype(np.int64))
-            jj.append(ju.astype(np.int64))
-            ll.append(lens)
-            shard_bytes += ii[-1].nbytes + jj[-1].nbytes + ll[-1].nbytes
+        # the host simulation replays shards back-to-back; lane attribution
+        # renders them as the parallel device tracks a mesh would run
+        with span("harvest/shard", lane=k, n_tiles=len(shard)):
+            for iu, ju, lens in iter_tile_edges(points=points, dists=dists,
+                                                tau_max=tau_max,
+                                                tile_m=tile_m, tile_n=tile_n,
+                                                backend=backend,
+                                                interpret=interpret,
+                                                stats=stats, tiles=shard):
+                ii.append(iu.astype(np.int64))
+                jj.append(ju.astype(np.int64))
+                ll.append(lens)
+                shard_bytes += ii[-1].nbytes + jj[-1].nbytes + ll[-1].nbytes
         if stats is not None:
             stats.shard_peak_harvest_bytes = max(
                 stats.shard_peak_harvest_bytes, shard_bytes)
@@ -157,19 +162,21 @@ def _harvest_shards_device(points, sq, shards, tau_max, tile_m, tile_n,
             xs[k, :ei - si] = pts32[si:ei]
             ys[k, :ej - sj] = pts32[sj:ej]
             live.append((k, si, ei, sj, ej))
-        # analyze: allow[host-sync] one round gather per tile wave is the harvest schedule (gather_bytes transient)
-        d2 = np.asarray(sharded(jnp.asarray(xs), jnp.asarray(ys)))
+        with span("harvest/round", round=r, n_live=len(live)):
+            # analyze: allow[host-sync] one round gather per tile wave is the harvest schedule (gather_bytes transient)
+            d2 = np.asarray(sharded(jnp.asarray(xs), jnp.asarray(ys)))
         if stats is not None:
             stats.gather_bytes = max(stats.gather_bytes,
                                      d2.nbytes + xs.nbytes + ys.nbytes)
         for k, si, ei, sj, ej in live:
             if stats is not None:
                 stats.tiles_visited += 1
-            # crop to the real extent first: zero-padded rows fabricate
-            # origin distances that must never reach the threshold test
-            iu, ju, lens = _refine_f32_tile(
-                d2[k, :ei - si, :ej - sj], points, sq, si, ei, sj, ej,
-                tau_max, thr32, stats)
+            with span("harvest/refine", lane=k, round=r, tile=f"{si},{sj}"):
+                # crop to the real extent first: zero-padded rows fabricate
+                # origin distances that must never reach the threshold test
+                iu, ju, lens = _refine_f32_tile(
+                    d2[k, :ei - si, :ej - sj], points, sq, si, ei, sj, ej,
+                    tau_max, thr32, stats)
             ii.append(iu.astype(np.int64))
             jj.append(ju.astype(np.int64))
             ll.append(lens)
@@ -215,19 +222,21 @@ def _harvest_shards_device_dists(dists, shards, tau_max, tile_m, tile_n,
             ei, ej = min(si + tile_m, n), min(sj + tile_n, n)
             buf[k, :ei - si, :ej - sj] = dists[si:ei, sj:ej]
             live.append((k, si, ei, sj, ej))
-        # analyze: allow[host-sync] the per-round candidate-mask gather is the schedule; the f64 re-measure needs it on host
-        cand = np.asarray(sharded(jnp.asarray(buf)))
+        with span("harvest/round", round=r, n_live=len(live)):
+            # analyze: allow[host-sync] the per-round candidate-mask gather is the schedule; the f64 re-measure needs it on host
+            cand = np.asarray(sharded(jnp.asarray(buf)))
         if stats is not None:
             stats.gather_bytes = max(stats.gather_bytes,
                                      cand.nbytes + buf.nbytes)
         for k, si, ei, sj, ej in live:
             if stats is not None:
                 stats.tiles_visited += 1
-            # crop to the real extent first: the inf padding is masked out
-            # by construction, the crop keeps the index math honest
-            iu, ju, lens = _refine_f32_dists_tile(
-                cand[k, :ei - si, :ej - sj], dists, si, ei, sj, ej,
-                tau_max, stats)
+            with span("harvest/refine", lane=k, round=r, tile=f"{si},{sj}"):
+                # crop to the real extent first: the inf padding is masked
+                # out by construction, the crop keeps the index math honest
+                iu, ju, lens = _refine_f32_dists_tile(
+                    cand[k, :ei - si, :ej - sj], dists, si, ei, sj, ej,
+                    tau_max, stats)
             ii.append(iu.astype(np.int64))
             jj.append(ju.astype(np.int64))
             ll.append(lens)

@@ -30,6 +30,7 @@ from typing import Iterator, Optional, Tuple
 
 import numpy as np
 
+from ..obs.trace import span
 from ..core.filtration import (Filtration, block_sq_dists,
                                filtration_from_edges, pair_sq_dists)
 
@@ -293,19 +294,26 @@ def iter_tile_edges(
         if stats is not None:
             stats.tiles_visited += 1
 
+        # the chunk is computed under its span and only then yielded, so
+        # consumer work between tiles is never attributed to the harvest
         if dists is not None:
-            lens_tile = np.asarray(dists[si:ei, sj:ej], dtype=np.float64)
-            yield _harvest_masked_tile(lens_tile, si, sj, tau_max,
-                                       _upper_mask(si, ei, sj, ej), stats)
+            with span("harvest/tile", tile=f"{si},{sj}", backend="dists"):
+                lens_tile = np.asarray(dists[si:ei, sj:ej], dtype=np.float64)
+                chunk = _harvest_masked_tile(lens_tile, si, sj, tau_max,
+                                             _upper_mask(si, ei, sj, ej),
+                                             stats)
         elif backend == "pallas":
-            # analyze: allow[host-sync] one gather per tile is the streaming contract; the f64 refine consumes it on host
-            d2_32 = np.asarray(pairwise_sq_dists(
-                pts32[si:ei], pts32[sj:ej], interpret=interpret))
-            yield _refine_f32_tile(d2_32, points, sq, si, ei, sj, ej,
-                                   tau_max, thr32, stats)
+            with span("harvest/tile", tile=f"{si},{sj}", backend="pallas"):
+                # analyze: allow[host-sync] one gather per tile is the streaming contract; the f64 refine consumes it on host
+                d2_32 = np.asarray(pairwise_sq_dists(
+                    pts32[si:ei], pts32[sj:ej], interpret=interpret))
+                chunk = _refine_f32_tile(d2_32, points, sq, si, ei, sj, ej,
+                                         tau_max, thr32, stats)
         else:
-            yield _harvest_points_tile(points, sq, si, ei, sj, ej,
-                                       tau_max, stats)
+            with span("harvest/tile", tile=f"{si},{sj}", backend="numpy"):
+                chunk = _harvest_points_tile(points, sq, si, ei, sj, ej,
+                                             tau_max, stats)
+        yield chunk
 
 
 def harvest_edges(
@@ -351,14 +359,15 @@ def merge_edge_chunks(
     """
     chunk_bytes = sum(a.nbytes + b.nbytes + c.nbytes
                       for a, b, c in zip(ii, jj, ll))
-    iu = np.concatenate(ii) if ii else np.zeros(0, dtype=np.int64)
-    ii.clear()
-    ju = np.concatenate(jj) if jj else np.zeros(0, dtype=np.int64)
-    jj.clear()
-    lens = np.concatenate(ll) if ll else np.zeros(0)
-    ll.clear()
-    srt = np.lexsort((ju, iu, lens))
-    iu, ju, lens = iu[srt], ju[srt], lens[srt]
+    with span("harvest/merge", n_chunks=len(ll)):
+        iu = np.concatenate(ii) if ii else np.zeros(0, dtype=np.int64)
+        ii.clear()
+        ju = np.concatenate(jj) if jj else np.zeros(0, dtype=np.int64)
+        jj.clear()
+        lens = np.concatenate(ll) if ll else np.zeros(0)
+        ll.clear()
+        srt = np.lexsort((ju, iu, lens))
+        iu, ju, lens = iu[srt], ju[srt], lens[srt]
     if stats is not None:
         stats.n_e = int(lens.size)
         stats.harvest_bytes = int(iu.nbytes + ju.nbytes + lens.nbytes)

@@ -19,6 +19,8 @@ import numpy as np
 
 from repro.models.config import ModelConfig
 from repro.models.transformer import init_params, make_cache
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.trace import span
 
 from .steps import extend_cache, make_decode_step, make_prefill_step, \
     sample_greedy
@@ -51,6 +53,7 @@ class ServeEngine:
         self._pos = np.zeros(max_batch, dtype=np.int32)      # next write pos
         self._cache = None
         self._last_tok = np.zeros((max_batch, 1), dtype=np.int32)
+        self.metrics = MetricsRegistry()
 
     # ------------------------------------------------------------------
     def submit(self, req: Request):
@@ -80,7 +83,10 @@ class ServeEngine:
         for i in admitted:
             p = self._slots[i].prompt[-self.prompt_len:]
             toks[i, -len(p):] = p                     # left-pad into the slot
-        logits, caches = self._prefill(self.params, {"tokens": jnp.asarray(toks)})
+        with span("serve/prefill", n_admitted=len(admitted)):
+            logits, caches = self._prefill(self.params,
+                                           {"tokens": jnp.asarray(toks)})
+        self.metrics.counter("serve_n_prefills").inc()
         # the whole batch drained before admission, so the cache is replaced
         self._cache = extend_cache(self.cfg, caches, self.prompt_len,
                                    self.s_max)
@@ -100,11 +106,14 @@ class ServeEngine:
         # all slots share cache_pos; slots are admitted at the same prompt
         # length so positions stay aligned (fixed-slot batching)
         pos = int(self._pos[active[0]])
-        logits, self._cache = self._decode(
-            self.params, self._cache,
-            {"tokens": jnp.asarray(self._last_tok),
-             "cache_pos": jnp.int32(pos)})
+        with span("serve/decode", n_active=len(active), cache_pos=pos):
+            logits, self._cache = self._decode(
+                self.params, self._cache,
+                {"tokens": jnp.asarray(self._last_tok),
+                 "cache_pos": jnp.int32(pos)})
         nxt = np.asarray(sample_greedy(logits))
+        self.metrics.counter("serve_n_decode_steps").inc()
+        self.metrics.counter("serve_n_tokens").inc(len(active))
         for i in active:
             req = self._slots[i]
             tok = int(nxt[i, 0])
@@ -117,6 +126,9 @@ class ServeEngine:
             if hit_eos or full:
                 self.done[req.uid] = req.generated
                 self._slots[i] = None
+                self.metrics.counter("serve_n_completed").inc()
+                self.metrics.histogram("serve_tokens_per_request").observe(
+                    len(req.generated))
         return sum(s is not None for s in self._slots)
 
     def run(self, max_steps: int = 10_000) -> Dict[int, List[int]]:
@@ -126,3 +138,8 @@ class ServeEngine:
             self.step()
             steps += 1
         return self.done
+
+    def stats(self) -> Dict[str, float]:
+        """Serving counters through the typed registry
+        (``serve_*`` names in the :mod:`repro.obs.metrics` schema)."""
+        return self.metrics.as_stats()

@@ -1,0 +1,19 @@
+"""Negative fixture: ad-hoc clock reads instead of the tracer.
+
+Never imported; linted as text by tests/test_analyze.py (with
+``force=True`` standing in for living outside repro/obs/ and
+benchmarks/).
+"""
+import time
+from time import perf_counter
+
+
+def measure(fn):
+    t0 = time.time()                     # BAD: raw wall clock
+    fn()
+    t1 = time.perf_counter()             # BAD: raw perf counter
+    t2 = perf_counter()                  # BAD: imported bare
+    t3 = time.process_time()             # BAD: cpu clock
+    deadline = time.monotonic() + 1.0    # OK: deadline arithmetic
+    time.sleep(0.0)                      # OK: not a measurement
+    return t1 - t0, t2, t3, deadline

@@ -1,0 +1,23 @@
+"""Negative fixture: spans opened without a guarding ``with``.
+
+Never imported; linted as text by tests/test_analyze.py.  The bare
+calls create context managers that never enter/exit, so the span is
+lost — or, with a manual ``__enter__``, leaks open when the body
+raises.
+"""
+from repro.obs.trace import span, stopwatch
+
+
+def leaky(tl, work):
+    sp = span("harvest/tile", tile="0,0")    # BAD: never entered
+    sw = stopwatch("ph/filtration")          # BAD: .elapsed never set
+    tl.span("reduce/fused", step=0)          # BAD: tracer-method form
+    work()
+    return sp, sw
+
+
+def clean(work):
+    with span("harvest/tile", tile="0,0"):   # OK: with item
+        with stopwatch("ph/filtration") as sw:
+            work()
+    return sw.elapsed

@@ -20,8 +20,9 @@ from repro.analyze.collectives import (
     collective_schedule_from_hlo, repo_programs, schedule_signature,
     verify_axes)
 from repro.analyze.lint import (
-    DtypeBoundaryRule, HostSyncRule, RawFiltrationSortRule, RefMutationRule,
-    UnseededRngRule, default_rules, lint_file, lint_source)
+    DtypeBoundaryRule, HostSyncRule, RawFiltrationSortRule, RawTimingRule,
+    RefMutationRule, SpanLeakRule, UnseededRngRule, default_rules, lint_file,
+    lint_source)
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 FIXTURES = os.path.join(REPO, "tests", "fixtures", "analyze")
@@ -76,6 +77,36 @@ def test_rng_fixture_caught():
     assert len(found) == 3          # np.random.rand, default_rng(), random.random
     # the seeded rng.normal(...) must not be flagged
     assert all("normal" not in f.message for f in found)
+
+
+def test_raw_timing_fixture_caught():
+    found = lint_fixture("bad_raw_timing.py", RawTimingRule())
+    assert len(found) == 4          # time, perf_counter x2, process_time
+    assert all("stopwatch" in f.message for f in found)
+    # monotonic (deadlines) and sleep stay legal
+    assert all("monotonic" not in f.message and "sleep" not in f.message
+               for f in found)
+
+
+def test_raw_timing_exempts_obs_and_benchmarks():
+    src = "import time\nt0 = time.perf_counter()\n"
+    rule = RawTimingRule()
+    assert not lint_source(src, "src/repro/obs/trace.py", rules=[rule])
+    assert not lint_source(src, "benchmarks/reduce_bench.py", rules=[rule])
+    assert len(lint_source(src, "src/repro/core/homology.py",
+                           rules=[rule])) == 1
+
+
+def test_span_leak_fixture_caught():
+    found = lint_fixture("bad_span_leak.py", SpanLeakRule())
+    assert len(found) == 3          # span, stopwatch, tl.span — bare calls
+    # the `with span(...)` / `with stopwatch(...)` uses must not be flagged
+    assert all(f.line < 18 for f in found)
+
+
+def test_new_rules_registered_in_defaults():
+    names = {r.name for r in default_rules()}
+    assert {"raw-timing", "span-leak"} <= names
 
 
 def test_allow_pragma_suppresses_with_justification():

@@ -1,0 +1,138 @@
+"""CI gate: BENCH JSONs must carry their per-phase span breakdowns.
+
+    python tools/check_bench_schema.py BENCH_reduce.json BENCH_scale.json \
+        [--trace trace.json --min-lanes 4]
+
+Each benchmark record type declares the ``phases`` keys its entries must
+emit (docs/observability.md documents the fields); a record missing its
+breakdown — e.g. a producer dropping a stats gauge during a refactor —
+fails the push instead of silently flattening the perf trajectory.
+
+``--trace`` additionally validates an exported Chrome trace: parseable
+``trace_event`` JSON with complete (``"X"``) events and, with
+``--min-lanes N``, at least ``N`` device lanes (``tid > 0``) so the
+distributed timeline renders as parallel tracks in Perfetto.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Dict, List
+
+# benchmark name -> phases keys required on each engine/top-level entry
+ENGINE_PHASES = ("filtration", "h0", "h1", "h2")
+DIST_PHASES = ("conc", "sweep", "sync")
+SCALE_PHASES = ("budget", "filtration", "ph")
+SCALE_MEMORY = ("predicted_account_bytes", "observed_peak_harvest_bytes",
+                "budget_drift_ratio")
+
+
+def _check_phases(where: str, entry: Dict, keys) -> List[str]:
+    errors: List[str] = []
+    phases = entry.get("phases")
+    if not isinstance(phases, dict):
+        return [f"{where}: missing per-phase breakdown 'phases'"]
+    for k in keys:
+        v = phases.get(k)
+        if not isinstance(v, (int, float)) or v < 0:
+            errors.append(f"{where}: phases[{k!r}] missing or negative "
+                          f"(got {v!r})")
+    return errors
+
+
+def check_reduce(record: Dict) -> List[str]:
+    errors: List[str] = []
+    engines = record.get("engines", {})
+    if not engines:
+        errors.append("reduce_bench: no engines recorded")
+    for name, entry in engines.items():
+        errors += _check_phases(f"engines[{name}]", entry, ENGINE_PHASES)
+    for name, entry in record.get("distributed", {}).items():
+        errors += _check_phases(f"distributed[{name}]", entry, DIST_PHASES)
+        wall = entry.get("sim_wall_s")
+        if isinstance(wall, (int, float)) and "phases" in entry:
+            parts = sum(entry["phases"].get(k, 0.0) for k in DIST_PHASES)
+            if abs(parts - wall) > max(0.01, 0.01 * wall):
+                errors.append(
+                    f"distributed[{name}]: phase decomposition "
+                    f"{parts:.4f}s does not add up to sim_wall_s "
+                    f"{wall:.4f}s")
+    return errors
+
+
+def check_scale(record: Dict) -> List[str]:
+    errors = _check_phases("scale_smoke", record, SCALE_PHASES)
+    for k in SCALE_MEMORY:
+        if not isinstance(record.get(k), (int, float)):
+            errors.append(f"scale_smoke: missing memory field {k!r}")
+    return errors
+
+
+CHECKERS = {"reduce_bench": check_reduce, "scale_smoke": check_scale}
+
+
+def check_bench_file(path: str) -> List[str]:
+    try:
+        with open(path, encoding="utf-8") as f:
+            record = json.load(f)
+    except (OSError, ValueError) as exc:
+        return [f"{path}: unreadable BENCH JSON ({exc})"]
+    kind = record.get("benchmark")
+    checker = CHECKERS.get(kind)
+    if checker is None:
+        return [f"{path}: unknown benchmark kind {kind!r} "
+                f"(known: {sorted(CHECKERS)})"]
+    return [f"{path}: {e}" for e in checker(record)]
+
+
+def check_trace_file(path: str, min_lanes: int) -> List[str]:
+    try:
+        with open(path, encoding="utf-8") as f:
+            doc = json.load(f)
+    except (OSError, ValueError) as exc:
+        return [f"{path}: unreadable trace JSON ({exc})"]
+    events = doc.get("traceEvents")
+    if not isinstance(events, list) or not events:
+        return [f"{path}: no traceEvents; not a Chrome trace"]
+    errors: List[str] = []
+    xs = [e for e in events if e.get("ph") == "X"]
+    if not xs:
+        errors.append(f"{path}: no complete ('X') span events")
+    for e in xs:
+        if not {"name", "ts", "dur", "pid", "tid"} <= set(e):
+            errors.append(f"{path}: malformed X event {e!r}")
+            break
+    lanes = {e["tid"] for e in xs if e.get("tid", 0) > 0}
+    if len(lanes) < min_lanes:
+        errors.append(f"{path}: {len(lanes)} device lanes < required "
+                      f"{min_lanes}")
+    return errors
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("bench", nargs="*", help="BENCH JSON files to validate")
+    ap.add_argument("--trace", action="append", default=[],
+                    help="exported Chrome trace JSON to validate (repeatable)")
+    ap.add_argument("--min-lanes", type=int, default=0,
+                    help="require at least N device lanes in each --trace")
+    args = ap.parse_args(argv)
+    if not args.bench and not args.trace:
+        ap.error("nothing to check: pass BENCH files and/or --trace")
+
+    errors: List[str] = []
+    for path in args.bench:
+        errors += check_bench_file(path)
+    for path in args.trace:
+        errors += check_trace_file(path, args.min_lanes)
+    for e in errors:
+        print(f"FAIL {e}", file=sys.stderr)
+    if not errors:
+        n = len(args.bench) + len(args.trace)
+        print(f"ok: {n} file(s) carry the per-phase schema")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
