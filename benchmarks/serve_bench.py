@@ -1,0 +1,160 @@
+"""CI benchmark for the PH serving engine -> BENCH_serve.json.
+
+Drives ``PHServeEngine`` through the canonical serving traffic shape — a
+cold wave of distinct datasets (union-batched into block-diagonal
+reductions), then an update wave of warm tau-growth and point-arrival
+requests against the cache — and records the service-level numbers CI
+gates on: requests/sec, cache-hit ratio, and p50/p95 per-request latency.
+
+    PYTHONPATH=src python -m benchmarks.serve_bench --requests 24 \
+        --out BENCH_serve.json
+
+``--min-rps X`` asserts end-to-end throughput (the CI contract);
+``--min-hit-ratio X`` asserts the update wave actually lands on the cache.
+Diagrams on the warm paths are asserted bit-identical to cold
+``compute_ph`` while at it, so the benchmark doubles as an end-to-end
+warm-start correctness check.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import numpy as np
+
+SERVE_COUNTERS = (
+    "serve_ph_n_requests", "serve_ph_n_admitted", "serve_ph_n_rejected",
+    "serve_ph_n_cache_hits", "serve_ph_n_cache_misses",
+    "serve_ph_n_warm_tau", "serve_ph_n_warm_points", "serve_ph_n_cold",
+    "serve_ph_n_batched", "serve_ph_n_batches", "serve_ph_n_evictions",
+)
+
+
+def run(args) -> dict:
+    from repro.core.homology import compute_ph
+    from repro.core.resume import canonical_diagram
+    from repro.obs.trace import stopwatch
+    from repro.serve.ph import PHRequest, PHServeEngine
+
+    engine = PHServeEngine(
+        memory_budget_bytes=args.budget_bytes,
+        store_budget_bytes=args.store_budget_bytes,
+        max_batch_clouds=args.max_batch_clouds,
+        seed=args.seed,
+        engine=args.reduce_engine,
+        batch_size=args.batch_size)
+    rng = np.random.default_rng(args.seed)
+    n_cold = max(1, args.requests // 2)
+    clouds = [rng.normal(size=(args.cloud_size, 3)) for _ in range(n_cold)]
+
+    uid = 0
+    for k, p in enumerate(clouds):
+        engine.submit(PHRequest(uid=uid, points=p, tau_max=args.tau,
+                                dataset=f"ds{k}"))
+        uid += 1
+    with stopwatch("serve_bench/cold") as sw_cold:
+        engine.run()
+
+    verify = []
+    while uid < args.requests:
+        k = int(rng.integers(0, n_cold))
+        if uid % 2 == 0:
+            req = PHRequest(uid=uid, points=clouds[k],
+                            tau_max=args.tau * 1.5, dataset=f"ds{k}")
+        else:
+            grown = np.concatenate(
+                [clouds[k], rng.normal(size=(args.arrivals, 3))], axis=0)
+            req = PHRequest(uid=uid, points=grown, tau_max=args.tau,
+                            dataset=f"ds{k}")
+        engine.submit(req)
+        verify.append((uid, req.points))
+        uid += 1
+    with stopwatch("serve_bench/warm") as sw_warm:
+        engine.run()
+
+    # warm responses must be bit-identical to cold compute_ph
+    n_verified = 0
+    for vuid, pts in verify[:args.verify]:
+        resp = engine.done[vuid]
+        if not resp.admitted:
+            continue
+        ref = compute_ph(points=pts, tau_max=resp.granted_tau, maxdim=2,
+                         mode="implicit")
+        for d in (0, 1, 2):
+            assert np.array_equal(resp.diagrams[d],
+                                  canonical_diagram(ref.diagrams[d])), \
+                (vuid, d, resp.path)
+        n_verified += 1
+
+    s = engine.stats()
+    lat = sorted(r.latency_s for r in engine.done.values())
+    lat_arr = np.array(lat) if lat else np.zeros(1)
+    wall = sw_cold.elapsed + sw_warm.elapsed
+    n_req = len(engine.done)
+    record = {
+        "benchmark": "serve_bench",
+        "requests": int(n_req),
+        "cloud_size": int(args.cloud_size),
+        "reduce_engine": args.reduce_engine,
+        "requests_per_s": round(n_req / max(wall, 1e-9), 2),
+        "cache_hit_ratio": round(
+            s.get("serve_ph_n_cache_hits", 0.0)
+            / max(s.get("serve_ph_n_requests", 0.0), 1.0), 4),
+        "latency_p50_s": round(float(np.quantile(lat_arr, 0.5)), 4),
+        "latency_p95_s": round(float(np.quantile(lat_arr, 0.95)), 4),
+        "latency_max_s": round(float(lat_arr.max()), 4),
+        "t_total_s": round(wall, 4),
+        "n_warm_verified": int(n_verified),
+        "store_bytes": int(s.get("serve_ph_store_bytes", 0)),
+        "phases": {
+            "cold": round(sw_cold.elapsed, 4),
+            "warm": round(sw_warm.elapsed, 4),
+        },
+    }
+    for k in SERVE_COUNTERS:
+        record[k] = int(s.get(k, 0.0))
+    return record
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--requests", type=int, default=24)
+    ap.add_argument("--cloud-size", type=int, default=40)
+    ap.add_argument("--tau", type=float, default=1.6)
+    ap.add_argument("--arrivals", type=int, default=5)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--budget-bytes", type=int, default=None)
+    ap.add_argument("--store-budget-bytes", type=int, default=None)
+    ap.add_argument("--max-batch-clouds", type=int, default=8)
+    ap.add_argument("--reduce-engine", default="single",
+                    choices=("single", "batch", "packed"))
+    ap.add_argument("--batch-size", type=int, default=64)
+    ap.add_argument("--verify", type=int, default=4,
+                    help="warm responses to check bit-identical vs cold")
+    ap.add_argument("--min-rps", type=float, default=None,
+                    help="assert requests/sec >= X; the CI contract")
+    ap.add_argument("--min-hit-ratio", type=float, default=None,
+                    help="assert cache-hit ratio >= X")
+    ap.add_argument("--out", type=str, default="BENCH_serve.json")
+    args = ap.parse_args()
+
+    record = run(args)
+    with open(args.out, "w") as f:
+        json.dump(record, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(json.dumps(record, indent=2, sort_keys=True))
+    print(f"wrote {args.out}")
+    if args.min_rps is not None:
+        got = record["requests_per_s"]
+        assert got >= args.min_rps, (
+            f"serving throughput regressed: {got} req/s < {args.min_rps}")
+        print(f"throughput {got} req/s >= {args.min_rps}: ok")
+    if args.min_hit_ratio is not None:
+        got = record["cache_hit_ratio"]
+        assert got >= args.min_hit_ratio, (
+            f"cache-hit ratio regressed: {got} < {args.min_hit_ratio}")
+        print(f"cache-hit ratio {got} >= {args.min_hit_ratio}: ok")
+
+
+if __name__ == "__main__":
+    main()

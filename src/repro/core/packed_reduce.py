@@ -101,7 +101,8 @@ from ..obs.metrics import MetricsRegistry
 from ..obs.trace import Tracer, active_tracer, critical_path
 from .pairing import EMPTY_KEY
 from .reduction import (DimensionAdapter, PivotStore, ReductionResult,
-                        clearance_commit, clearing_filter, merge_cancel)
+                        clearance_commit, clearing_filter, finalize_result,
+                        merge_cancel, seed_column)
 
 _MAX_SEGMENTS = 12   # host path consolidates past this many segments
 _EVICT_MAX = 8       # rounds needing new keys for fewer rows evict instead
@@ -742,6 +743,9 @@ def reduce_dimension_packed(
     mesh=None,
     cache=None,
     exchange_every: int = 4,
+    seed_gens: Optional[Dict[int, np.ndarray]] = None,
+    commit_sink: Optional[list] = None,
+    essential_log: Optional[list] = None,
 ) -> ReductionResult:
     """Bit-packed serial-parallel cohomology reduction (module docstring).
 
@@ -793,12 +797,24 @@ def reduce_dimension_packed(
     if cache is None:
         from .pivot_cache import PackedPivotCache
         cache = PackedPivotCache()
-    commit_log: Optional[list] = [] if P > 1 else None
+    # P == 1 appends commits straight into the caller's sink (if any);
+    # P > 1 owns a scratch log that is drained into per-shard wire
+    # backlogs every slice — the sink then receives copies of each
+    # drained record (``seed_gens`` / ``commit_sink`` / ``essential_log``
+    # carry the same warm-restart + capture contract as
+    # ``reduce_dimension``; see repro.core.resume)
+    commit_log: Optional[list] = [] if P > 1 else commit_sink
     store = PivotStore(adapter, mode, store_budget_bytes=store_budget_bytes,
                        cache=cache, commit_log=commit_log)
     if P > 1:
         from .pivot_cache import decode_commit_delta, encode_commit_delta
-        replica = PivotStore(adapter, mode, cache=cache)
+        # the replica mirrors the authority's track_gens: with an explicit
+        # budgeted store the wire ships δ-expansions precisely so that
+        # replica probes can return them (install() never spills, so the
+        # budget carries no other behavior here)
+        replica = PivotStore(adapter, mode,
+                             store_budget_bytes=store_budget_bytes,
+                             cache=cache)
         exchange = _make_exchange(mesh, P)
         lookup_store = replica
         # commits the replica has not installed yet: each shard's wire
@@ -812,6 +828,7 @@ def reduce_dimension_packed(
         lookup_store = store
     pairs: List[tuple] = []
     essentials: List[float] = []
+    essential_ids: List[int] = []
     n_reductions = 0
     n_rounds = 0
     n_expansions = 0
@@ -868,6 +885,29 @@ def reduce_dimension_packed(
         t_seq = 0.0
         with tl.span("reduce/fused", step=step, weights=wt) as sp:
             cob = adapter.cobdy(ids_arr)
+            if seed_gens:
+                # warm restart: seeded rows start from their recorded
+                # residual (a valid left-to-right partial reduction state)
+                # with gens parity pre-loaded — pad the row width when a
+                # residual outgrows one coboundary row
+                residuals: Dict[int, np.ndarray] = {}
+                for i in range(B):
+                    seed = seed_gens.get(ids_int[i])
+                    if seed is not None and len(seed):
+                        residuals[i] = seed_column(adapter, ids_int[i], seed)
+                        gens[i] = {int(g): 1 for g in seed}
+                if residuals:
+                    width = max(cob.shape[1],
+                                max(r.size for r in residuals.values()))
+                    if width > cob.shape[1]:
+                        pad = np.full((B, width - cob.shape[1]), EMPTY_KEY,
+                                      dtype=np.int64)
+                        cob = np.concatenate([cob, pad], axis=1)
+                    else:
+                        cob = cob.copy()
+                    for i, r in residuals.items():
+                        cob[i, :] = EMPTY_KEY
+                        cob[i, :r.size] = r
 
             # seed the bit-space with the first round of addends so the
             # common case packs exactly once; the concurrent phase probes
@@ -1005,20 +1045,25 @@ def reduce_dimension_packed(
                             dirty[changed - s0] = True
                         dirty &= batchblk.lows[s0:s1] >= 0
 
-                log_mark = len(commit_log) if commit_log is not None else 0
+                log_mark = len(commit_log) \
+                    if (P > 1 and commit_log is not None) else 0
                 clearance_commit(
                     store, adapter, sids, batchblk.lows[s0:s1],
                     gens[s0:s1],
                     lambda rr, rows=rows: batchblk.unpack(
                         rows[np.asarray(rr, dtype=np.int64)]),
-                    pairs, essentials)
-                if commit_log is not None and len(commit_log) > log_mark:
+                    pairs, essentials, essential_ids=essential_ids,
+                    essential_log=essential_log)
+                if P > 1 and len(commit_log) > log_mark:
                     # drain this slice's commits straight into its shard's
                     # wire backlog; their lows are pending until the next
                     # exchange.  With gens untracked (explicit, no budget)
                     # neither side of the wire ever reads a δ-expansion —
-                    # don't ship them
+                    # don't ship them.  The caller's sink gets record
+                    # copies *before* the gens strip mutates them.
                     fresh = commit_log[log_mark:]
+                    if commit_sink is not None:
+                        commit_sink.extend(dict(r) for r in fresh)
                     if not store.track_gens:
                         for r in fresh:
                             r["gens"] = None
@@ -1082,9 +1127,6 @@ def reduce_dimension_packed(
 
     if san is not None:
         san.set_context(superstep=None, batch=None, slice=None)
-    pair_arr = np.array([(b, d) for b, d, _ in pairs if d > b],
-                        dtype=np.float64).reshape(-1, 2)
-    pivot_lows = np.array([low for _, _, low in pairs], dtype=np.int64)
     # the reported sim walls are DERIVED from the span timeline — the
     # bookkeeping above survives only as its cross-check
     cp = critical_path(tl.spans)
@@ -1112,10 +1154,4 @@ def reduce_dimension_packed(
         reg.gauge(key).set(val)
     reg.gauge("sim_wall_bookkeeping_s").set(sim_wall_book)
     reg.update_from(cache.stats())
-    stats = reg.as_stats()
-    return ReductionResult(
-        pairs=pair_arr,
-        essentials=np.array(essentials, dtype=np.float64),
-        pivot_lows=pivot_lows,
-        stats=stats,
-    )
+    return finalize_result(pairs, essentials, essential_ids, reg.as_stats())

@@ -87,6 +87,13 @@ class ReductionResult:
     essentials: np.ndarray     # (m,) float64 births of never-dying classes
     pivot_lows: np.ndarray     # int64 keys that became pivots (for clearing)
     stats: Dict[str, float]
+    # provenance (optional — engines fill them, synthetic results may not):
+    # column ids aligned with ``pairs`` rows / ``pivot_lows`` entries /
+    # ``essentials`` entries, so callers can split a batched reduction back
+    # into per-source diagrams and warm-start engines can replay columns
+    pair_cols: Optional[np.ndarray] = None      # (k,) int64
+    pivot_cols: Optional[np.ndarray] = None     # (p,) int64, incl. trivial
+    essential_ids: Optional[np.ndarray] = None  # (m,) int64
 
     def diagram(self) -> np.ndarray:
         ess = np.stack([self.essentials,
@@ -399,10 +406,59 @@ def clearing_filter(column_ids, cleared) -> np.ndarray:
     return ids[~np.isin(ids, carr)]
 
 
+def finalize_result(pairs: List[tuple], essentials: List[float],
+                    essential_ids: List[int],
+                    stats: Dict[str, float]) -> ReductionResult:
+    """Assemble a :class:`ReductionResult` from 4-tuple ``(b, d, low, col)``
+    pair records — trivial pairs (d == b) drop out of the diagram but keep
+    their lows/cols for clearing and warm restarts (shared by all engines).
+    """
+    finite = [(b, d) for b, d, _, _ in pairs if d > b]
+    pair_arr = np.array(finite, dtype=np.float64).reshape(-1, 2)
+    pair_cols = np.array([c for b, d, _, c in pairs if d > b], dtype=np.int64)
+    pivot_lows = np.array([low for _, _, low, _ in pairs], dtype=np.int64)
+    pivot_cols = np.array([c for _, _, _, c in pairs], dtype=np.int64)
+    return ReductionResult(
+        pairs=pair_arr,
+        essentials=np.array(essentials, dtype=np.float64),
+        pivot_lows=pivot_lows,
+        stats=stats,
+        pair_cols=pair_cols,
+        pivot_cols=pivot_cols,
+        essential_ids=np.array(essential_ids, dtype=np.int64),
+    )
+
+
+def _parity_gens(gens_parity: Dict[int, int]) -> np.ndarray:
+    """Odd-count generator ids of a parity dict as a sorted int64 array."""
+    g = np.array([k for k, p in gens_parity.items() if p % 2 == 1],
+                 dtype=np.int64)
+    g.sort()
+    return g
+
+
+def seed_column(adapter: DimensionAdapter, col_id: int,
+                seed: np.ndarray) -> np.ndarray:
+    """Initial residual of a warm-started column (resume support).
+
+    ``R0(col) = ⊕_{g ∈ seed ∪ {col}} δg`` — the partial reduction state a
+    prior run recorded as the column's V-expansion, re-expressed against the
+    *current* coboundary.  Every ``g`` precedes ``col`` in decreasing
+    filtration order, so handing this to an engine in place of ``δ(col)``
+    is a valid left-to-right partial reduction: completing it greedily
+    yields the canonical pairing, bit-identical to a cold run.
+    """
+    seed = np.asarray(seed, dtype=np.int64)
+    gens = np.concatenate([seed, np.array([col_id], dtype=np.int64)])
+    return parity_reduce(adapter.cobdy(gens).ravel())
+
+
 def clearance_commit(store: PivotStore, adapter: DimensionAdapter,
                      ids: np.ndarray, lows: np.ndarray,
                      gens_list, get_columns,
-                     pairs: List[tuple], essentials: List[float]) -> None:
+                     pairs: List[tuple], essentials: List[float],
+                     essential_ids: Optional[List[int]] = None,
+                     essential_log: Optional[list] = None) -> None:
     """Batched clearance (§4.4 "clearance" step), shared by the batch and
     packed engines: batched value lookups, trivial-pair detection, commits
     in batch order.
@@ -411,8 +467,11 @@ def clearance_commit(store: PivotStore, adapter: DimensionAdapter,
     ``get_columns(rows)`` materializes the R key arrays for exactly the
     rows whose explicit columns the store will hold — it is never called
     for trivial pairs (nothing stored, §4.3.5) nor for a pure implicit
-    store (only gens stored).  Appends ``(birth, death, low)`` tuples and
-    essential births in place.
+    store (only gens stored).  Appends ``(birth, death, low, col_id)``
+    tuples and essential births in place.  ``essential_ids`` collects the
+    essential column ids alongside; ``essential_log`` additionally records
+    each essential column's δ-expansion (``{"col_id", "gens"}``) so a
+    warm restart can replay it (:mod:`repro.core.resume`).
     """
     ids_arr = np.asarray(ids, dtype=np.int64)
     lows = np.asarray(lows, dtype=np.int64)
@@ -421,6 +480,14 @@ def clearance_commit(store: PivotStore, adapter: DimensionAdapter,
     if empty:
         births = adapter.birth_value(ids_arr[empty])
         essentials.extend(float(b) for b in births)
+        if essential_ids is not None:
+            essential_ids.extend(int(ids_arr[i]) for i in empty)
+        if essential_log is not None:
+            for i in empty:
+                essential_log.append({
+                    "col_id": int(ids_arr[i]),
+                    "gens": _parity_gens(gens_list[i]),
+                })
     nonempty = [i for i in range(B) if lows[i] >= 0]
     if not nonempty:
         return
@@ -445,12 +512,11 @@ def clearance_commit(store: PivotStore, adapter: DimensionAdapter,
             store.commit(int(ne_lows[k]), int(ne_ids[k]), no_col, no_col,
                          True)
         else:
-            g = np.array(
-                [kk for kk, p in gens_list[i].items() if p % 2 == 1],
-                dtype=np.int64)
+            g = _parity_gens(gens_list[i])
             store.commit(int(ne_lows[k]), int(ne_ids[k]), cols.get(i, no_col),
                          g, False)
-        pairs.append((float(births[k]), float(deaths[k]), int(ne_lows[k])))
+        pairs.append((float(births[k]), float(deaths[k]), int(ne_lows[k]),
+                      int(ne_ids[k])))
 
 
 def reduce_dimension(
@@ -460,6 +526,9 @@ def reduce_dimension(
     cleared=None,
     return_store: bool = False,
     store_budget_bytes: Optional[int] = None,
+    seed_gens: Optional[Dict[int, np.ndarray]] = None,
+    commit_log: Optional[list] = None,
+    essential_log: Optional[list] = None,
 ):
     """Single-column (paper 1-thread) cohomology reduction.
 
@@ -468,23 +537,42 @@ def reduce_dimension(
     ``store_budget_bytes`` bounds the explicit pivot store: columns past the
     budget are kept implicitly (V^⊥) and re-materialized on lookup — same
     diagram, bounded memory (see :class:`PivotStore`).
+
+    Warm restarts (:mod:`repro.core.resume`): ``seed_gens`` maps column ids
+    to the δ-expansion a prior run recorded for them — a seeded column
+    starts from :func:`seed_column`'s residual with its gens parity
+    pre-loaded, so committed/logged expansions stay *full* raw-δ
+    expansions.  ``commit_log`` threads through to :class:`PivotStore`
+    (every non-trivial commit appended); ``essential_log`` records
+    ``{"col_id", "gens"}`` for every essential column.
     """
-    store = PivotStore(adapter, mode, store_budget_bytes=store_budget_bytes)
+    store = PivotStore(adapter, mode, store_budget_bytes=store_budget_bytes,
+                       commit_log=commit_log)
     pairs: List[tuple] = []
     essentials: List[float] = []
+    essential_ids: List[int] = []
     n_reductions = 0
     n_columns_in = len(column_ids)
     column_ids = clearing_filter(column_ids, cleared)
 
     for col_id in column_ids:
         col_id = int(col_id)
-        r = adapter.cobdy(np.array([col_id], dtype=np.int64))[0]
-        r = r[r != EMPTY_KEY]
-        gens_parity: Dict[int, int] = {}
+        seed = seed_gens.get(col_id) if seed_gens else None
+        if seed is not None and len(seed):
+            r = seed_column(adapter, col_id, seed)
+            gens_parity: Dict[int, int] = {int(g): 1 for g in seed}
+        else:
+            r = adapter.cobdy(np.array([col_id], dtype=np.int64))[0]
+            r = r[r != EMPTY_KEY]
+            gens_parity = {}
         while True:
             if r.size == 0:
                 essentials.append(float(
                     adapter.birth_value(np.array([col_id], dtype=np.int64))[0]))
+                essential_ids.append(col_id)
+                if essential_log is not None:
+                    essential_log.append({"col_id": col_id,
+                                          "gens": _parity_gens(gens_parity)})
                 break
             low = int(r[0])
             addend = store.lookup_addend(low, col_id)
@@ -495,13 +583,11 @@ def reduce_dimension(
                 owner = int(adapter.owner_of_low(
                     np.array([low], dtype=np.int64))[0])
                 trivial = (mc == low) and (owner == col_id)
-                gens = np.array(
-                    [g for g, p in gens_parity.items() if p % 2 == 1],
-                    dtype=np.int64)
+                gens = _parity_gens(gens_parity)
                 store.commit(low, col_id, r, gens, trivial)
                 b = float(adapter.birth_value(np.array([col_id], dtype=np.int64))[0])
                 d = float(adapter.death_value(np.array([low], dtype=np.int64))[0])
-                pairs.append((b, d, low))
+                pairs.append((b, d, low, col_id))
                 break
             # r <- r (+) R(owner); track V in parity dict (implicit bookkeeping)
             n_reductions += 1
@@ -511,10 +597,6 @@ def reduce_dimension(
                 gens_parity[int(g)] = gens_parity.get(int(g), 0) + 1
             r = merge_cancel(r, addend)
 
-    pair_arr = np.array([(b, d) for b, d, _ in pairs if d > b],
-                        dtype=np.float64).reshape(-1, 2)
-    pivot_lows = np.array([low for _, _, low in pairs], dtype=np.int64)
-    ess_arr = np.array(essentials, dtype=np.float64)
     reg = MetricsRegistry()
     reg.counter("n_columns").inc(n_columns_in)
     reg.counter("n_reductions").inc(n_reductions)
@@ -523,10 +605,7 @@ def reduce_dimension(
     reg.gauge("stored_bytes").set(store.bytes_stored)
     reg.gauge("n_stored_columns").set(len(store.columns))
     reg.counter("n_spilled").inc(store.n_spilled)
-    result = ReductionResult(
-        pairs=pair_arr, essentials=ess_arr, pivot_lows=pivot_lows,
-        stats=reg.as_stats(),
-    )
+    result = finalize_result(pairs, essentials, essential_ids, reg.as_stats())
     if return_store:
         return result, store
     return result

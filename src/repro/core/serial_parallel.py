@@ -29,8 +29,8 @@ from ..obs.metrics import MetricsRegistry
 from ..obs.trace import span
 from .pairing import EMPTY_KEY
 from .reduction import (DimensionAdapter, PivotStore, ReductionResult,
-                        clearance_commit, clearing_filter, merge_cancel,
-                        self_owner_of, store_gens)
+                        clearance_commit, clearing_filter, finalize_result,
+                        merge_cancel, seed_column, self_owner_of, store_gens)
 
 
 def _reduce_vs_store(store: PivotStore, adapter: DimensionAdapter,
@@ -62,16 +62,25 @@ def reduce_dimension_batched(
     cleared=None,
     batch_size: int = 128,
     store_budget_bytes: Optional[int] = None,
+    seed_gens: Optional[Dict[int, np.ndarray]] = None,
+    commit_log: Optional[list] = None,
+    essential_log: Optional[list] = None,
 ) -> ReductionResult:
     """Serial-parallel batched reduction (module docstring).
 
     ``store_budget_bytes`` bounds the pivot store exactly like the single
     engine's: explicit ``R^⊥`` columns past the budget spill to implicit
     ``V^⊥`` form, largest-explicit-column-first (see :class:`PivotStore`).
+    ``seed_gens`` / ``commit_log`` / ``essential_log`` carry the same warm
+    restart + capture contract as :func:`~repro.core.reduction
+    .reduce_dimension` (seeded columns start from their recorded residual;
+    commits and essential expansions are logged for checkpointing).
     """
-    store = PivotStore(adapter, mode, store_budget_bytes=store_budget_bytes)
+    store = PivotStore(adapter, mode, store_budget_bytes=store_budget_bytes,
+                       commit_log=commit_log)
     pairs: List[tuple] = []
     essentials: List[float] = []
+    essential_ids: List[int] = []
     n_reductions = 0
     queue = clearing_filter(column_ids, cleared)
 
@@ -82,6 +91,12 @@ def reduce_dimension_batched(
         cob = adapter.cobdy(ids)
         rs: List[np.ndarray] = [row[row != EMPTY_KEY] for row in cob]
         gens: List[Dict[int, int]] = [dict() for _ in range(B)]
+        if seed_gens:
+            for i in range(B):
+                seed = seed_gens.get(int(ids[i]))
+                if seed is not None and len(seed):
+                    rs[i] = seed_column(adapter, int(ids[i]), seed)
+                    gens[i] = {int(g): 1 for g in seed}
         marked = [False] * B
         empty = [False] * B
 
@@ -133,18 +148,13 @@ def reduce_dimension_batched(
                              for i in range(B)], dtype=np.int64)
             clearance_commit(store, adapter, ids, lows, gens,
                              lambda rows: [rs[int(i)] for i in rows],
-                             pairs, essentials)
+                             pairs, essentials, essential_ids=essential_ids,
+                             essential_log=essential_log)
 
-    pair_arr = np.array([(b, d) for b, d, _ in pairs if d > b],
-                        dtype=np.float64).reshape(-1, 2)
-    pivot_lows = np.array([low for _, _, low in pairs], dtype=np.int64)
-    return ReductionResult(
-        pairs=pair_arr,
-        essentials=np.array(essentials, dtype=np.float64),
-        pivot_lows=pivot_lows,
-        stats=_final_stats(store, queue, pairs, essentials, n_reductions,
-                           batch_size),
-    )
+    return finalize_result(
+        pairs, essentials, essential_ids,
+        _final_stats(store, queue, pairs, essentials, n_reductions,
+                     batch_size))
 
 
 def _final_stats(store: PivotStore, queue, pairs, essentials,

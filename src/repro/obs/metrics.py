@@ -134,6 +134,37 @@ SCHEMA: Dict[str, MetricSpec] = {s.name: s for s in [
     _spec("serve_n_completed", "counter", "requests", "requests completed"),
     _spec("serve_tokens_per_request", "histogram", "tokens",
           "decoded tokens per completed request"),
+    # -- PH serving engine (repro.serve.ph) --
+    _spec("serve_ph_n_requests", "counter", "requests",
+          "PH requests submitted"),
+    _spec("serve_ph_n_admitted", "counter", "requests",
+          "requests admitted by the tau_max memory account"),
+    _spec("serve_ph_n_rejected", "counter", "requests",
+          "requests rejected at admission (budget cannot hold O(n) part)"),
+    _spec("serve_ph_n_cache_hits", "counter", "requests",
+          "requests served against a cached dataset checkpoint"),
+    _spec("serve_ph_n_cache_misses", "counter", "requests",
+          "requests with no usable cached state (cold path)"),
+    _spec("serve_ph_n_warm_tau", "counter", "requests",
+          "warm tau-growth restarts served"),
+    _spec("serve_ph_n_warm_points", "counter", "requests",
+          "warm point-arrival restarts served"),
+    _spec("serve_ph_n_cold", "counter", "requests",
+          "cold reductions run (no reusable pivots)"),
+    _spec("serve_ph_n_batched", "counter", "requests",
+          "cold requests packed into union-batch reductions"),
+    _spec("serve_ph_n_batches", "counter", "batches",
+          "union-batch reductions launched"),
+    _spec("serve_ph_batch_clouds", "histogram", "requests",
+          "clouds packed per union-batch reduction"),
+    _spec("serve_ph_n_evictions", "counter", "datasets",
+          "cached dataset states evicted under a tenant store budget"),
+    _spec("serve_ph_store_bytes", "gauge", "bytes",
+          "resident bytes of cached checkpoints (all tenants)"),
+    _spec("serve_ph_queue_depth", "gauge", "requests",
+          "pending requests at the last step boundary"),
+    _spec("serve_ph_latency_s", "histogram", "s",
+          "per-request service wall (span-derived)"),
 ]}
 
 

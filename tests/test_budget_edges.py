@@ -1,0 +1,152 @@
+"""Edge cases of the admission-side memory account (ISSUE 9, satellite).
+
+``estimate_tau_max`` inverts the paper's ``(3n + 12 n_e) * 4``-byte base
+account into a tau cap.  These tests pin its behavior exactly at the
+account boundary, on degenerate (<= 2 point, duplicate, all-tied) clouds,
+and end-to-end through the serving engine's admission controller.
+"""
+import numpy as np
+import pytest
+
+from repro.scale.budget import (account_bytes, edge_budget,
+                                estimate_tau_max)
+from repro.serve.ph import PHRequest, PHServeEngine
+
+
+def simplex_points(n):
+    """n points pairwise equidistant (sqrt(2)): rows of the identity."""
+    return np.eye(n)
+
+
+# ---------------------------------------------------------------------------
+# the account boundary
+# ---------------------------------------------------------------------------
+
+def test_budget_exactly_at_account_boundary_covers_full_clique():
+    """budget == (3n + 12 n_e) * 4 with n_e the full clique -> inf."""
+    n = 10
+    total_pairs = n * (n - 1) // 2
+    budget = account_bytes(n, total_pairs)
+    assert edge_budget(n, budget) == total_pairs
+    pts = np.random.default_rng(0).normal(size=(n, 3))
+    assert estimate_tau_max(pts, budget) == np.inf
+
+
+def test_budget_one_edge_below_boundary_is_finite():
+    n = 10
+    total_pairs = n * (n - 1) // 2
+    budget = account_bytes(n, total_pairs) - 1   # one byte under
+    assert edge_budget(n, budget) == total_pairs - 1
+    pts = np.random.default_rng(0).normal(size=(n, 3))
+    tau = estimate_tau_max(pts, budget, n_samples=50_000)
+    assert np.isfinite(tau) and tau > 0
+
+
+def test_budget_below_o_n_floor_raises():
+    n = 10
+    floor = 3 * n * 4            # the O(n) vertex arrays alone
+    pts = np.random.default_rng(0).normal(size=(n, 3))
+    with pytest.raises(ValueError, match="cannot hold even the O\\(n\\)"):
+        estimate_tau_max(pts, floor)     # zero edges affordable
+    # one more edge's worth admits
+    assert estimate_tau_max(pts, account_bytes(n, 1),
+                            n_samples=10_000) >= 0.0
+
+
+def test_edge_budget_inverts_account_bytes_exactly():
+    for n in (2, 7, 100):
+        for n_e in (0, 1, 13, n * (n - 1) // 2):
+            assert edge_budget(n, account_bytes(n, n_e)) == n_e
+            assert edge_budget(n, account_bytes(n, n_e) + 47) == n_e
+            assert edge_budget(n, account_bytes(n, n_e) + 48) == n_e + 1
+
+
+# ---------------------------------------------------------------------------
+# degenerate clouds
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n", [0, 1, 2])
+def test_tiny_clouds_with_room_return_inf(n):
+    pts = np.zeros((n, 3))
+    assert estimate_tau_max(pts, 10_000) == np.inf
+
+
+def test_two_points_exact_boundary():
+    pts = np.array([[0.0, 0.0], [3.0, 4.0]])     # one pair, length 5
+    assert estimate_tau_max(pts, account_bytes(2, 1)) == np.inf
+    with pytest.raises(ValueError):
+        estimate_tau_max(pts, account_bytes(2, 0))
+
+
+def test_duplicate_points_give_zero_tau():
+    """All sampled pair lengths are 0, so every quantile is 0."""
+    pts = np.zeros((40, 3))
+    budget = account_bytes(40, 100)          # affords 100 of 780 pairs
+    assert estimate_tau_max(pts, budget, n_samples=5_000) == 0.0
+
+
+def test_all_tied_distances_return_the_tied_value():
+    """With every pairwise distance equal, the empirical quantile is that
+    distance at any budgeted fraction — the estimate cannot separate
+    edges the metric does not separate (callers see the whole clique
+    admitted at tau = the tie)."""
+    pts = simplex_points(12)                 # all distances sqrt(2)
+    budget = account_bytes(12, 5)            # affords only 5 of 66 pairs
+    tau = estimate_tau_max(pts, budget, n_samples=5_000)
+    assert tau == pytest.approx(np.sqrt(2.0))
+
+
+def test_estimate_is_deterministic_in_seed():
+    pts = np.random.default_rng(1).normal(size=(30, 3))
+    budget = account_bytes(30, 60)
+    a = estimate_tau_max(pts, budget, n_samples=2_000, seed=7)
+    b = estimate_tau_max(pts, budget, n_samples=2_000, seed=7)
+    c = estimate_tau_max(pts, budget, n_samples=2_000, seed=8)
+    assert a == b
+    assert np.isfinite(a) and np.isfinite(c)
+
+
+# ---------------------------------------------------------------------------
+# the same edges through the serving admission controller
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n", [1, 2])
+def test_serve_tiny_clouds_end_to_end(n):
+    pts = np.arange(n * 3, dtype=np.float64).reshape(n, 3)
+    eng = PHServeEngine(engine="single")
+    eng.submit(PHRequest(uid=0, points=pts, tau_max=10.0))
+    eng.run()
+    r = eng.done[0]
+    assert r.admitted
+    assert r.diagrams[1].shape == (0, 2)
+    assert r.diagrams[2].shape == (0, 2)
+    # H0: n - 1 finite deaths at most, one essential component
+    assert np.isinf(r.diagrams[0]).sum() == 1
+
+
+def test_serve_duplicate_points_cloud():
+    pts = np.zeros((8, 3))
+    eng = PHServeEngine(engine="single")
+    eng.submit(PHRequest(uid=0, points=pts, tau_max=1.0))
+    eng.run()
+    r = eng.done[0]
+    assert r.admitted
+    # zero-length edges merge everything at 0: no finite H0 bars survive
+    # the zero-persistence filter, one essential component, no H1/H2
+    assert np.isinf(r.diagrams[0]).sum() == 1
+    assert r.diagrams[1].shape == (0, 2)
+
+
+def test_serve_admission_account_at_boundary():
+    n = 12
+    pts = np.random.default_rng(2).normal(size=(n, 3))
+    total_pairs = n * (n - 1) // 2
+    eng = PHServeEngine(memory_budget_bytes=account_bytes(n, total_pairs),
+                        engine="single")
+    eng.submit(PHRequest(uid=0, points=pts, tau_max=np.inf))
+    eng.run()
+    r = eng.done[0]
+    # the boundary budget covers the full clique: nothing clamped
+    assert r.admitted and r.granted_tau == np.inf
+    assert r.admission.n_e_est == total_pairs
+    assert r.admission.predicted_bytes == account_bytes(n, total_pairs)

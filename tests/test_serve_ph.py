@@ -1,0 +1,399 @@
+"""Metamorphic suite for PH serving (ISSUE 9).
+
+The load-bearing property: a *warm-started* reduction — tau growth reusing
+committed pivots, point arrival replaying recorded V-expansions — is
+**bit-identical** to a cold ``compute_ph`` of the same inputs, across
+engines (``single`` / ``packed``), shard counts, and update kinds; and a
+*batched* union reduction of many clouds splits into per-cloud diagrams
+exactly equal to each cloud's standalone reduction.  Diagrams compare after
+canonical row sorting (processing order differs; the multiset does not).
+"""
+import numpy as np
+import pytest
+
+from repro.core import build_filtration, compute_ph
+from repro.core.resume import (batched_cold_reduce, canonical_diagram,
+                               cold_reduce, edge_order_map, make_reducer,
+                               warm_point_arrival, warm_tau_growth)
+from repro.serve.ph import (PHRequest, PHServeEngine, fingerprint_points)
+
+# both reduction engines, the packed one at >= 2 distributed shard counts
+ENGINE_CONFIGS = [
+    pytest.param({"engine": "single"}, id="single"),
+    pytest.param({"engine": "packed", "batch_size": 16}, id="packed"),
+    pytest.param({"engine": "packed", "batch_size": 16, "n_shards": 2},
+                 id="packed-p2"),
+    pytest.param({"engine": "packed", "batch_size": 16, "n_shards": 3},
+                 id="packed-p3"),
+]
+DIMS = (0, 1, 2)
+
+
+def cloud(seed, n, d=3):
+    return np.random.default_rng(seed).normal(size=(n, d))
+
+
+def cold_diagrams(points, tau, maxdim=2):
+    res = compute_ph(points=points, tau_max=tau, maxdim=maxdim,
+                     mode="implicit")
+    return {d: canonical_diagram(res.diagrams[d]) for d in res.diagrams}
+
+
+def assert_same(diagrams, reference, dims=DIMS, ctx=""):
+    for d in dims:
+        assert np.array_equal(canonical_diagram(diagrams[d]),
+                              reference[d]), (ctx, d)
+
+
+# ---------------------------------------------------------------------------
+# cold capture
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("opts", ENGINE_CONFIGS)
+def test_cold_reduce_matches_compute_ph(opts):
+    pts = cloud(0, 22)
+    filt = build_filtration(points=pts, tau_max=1.8)
+    diagrams, ckpt = cold_reduce(filt, mode="implicit", **opts)
+    assert_same(diagrams, cold_diagrams(pts, 1.8))
+    assert ckpt.n == 22 and ckpt.n_e == filt.n_e
+    assert ckpt.nbytes() > 0
+    # every essential + committed non-trivial column carries an expansion
+    for d in (1, 2):
+        for e in ckpt.dims[d].essential_ids:
+            assert int(e) in ckpt.dims[d].gens
+
+
+def test_capture_requires_tracked_gens():
+    with pytest.raises(ValueError, match="tracked"):
+        make_reducer(engine="single", mode="explicit")
+    # explicit + budget tracks gens, so capture is allowed
+    make_reducer(engine="single", mode="explicit", store_budget_bytes=1 << 20)
+
+
+def test_make_reducer_rejects_bad_engine():
+    with pytest.raises(ValueError, match="unknown engine"):
+        make_reducer(engine="gpu9000")
+    with pytest.raises(ValueError, match="n_shards"):
+        make_reducer(engine="single", n_shards=2)
+
+
+# ---------------------------------------------------------------------------
+# warm start: tau growth
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("opts", ENGINE_CONFIGS)
+def test_warm_tau_growth_bit_identical(opts):
+    pts = cloud(1, 26)
+    _, ckpt = cold_reduce(build_filtration(points=pts, tau_max=1.3),
+                          mode="implicit", **opts)
+    filt1 = build_filtration(points=pts, tau_max=2.2)
+    diagrams, ckpt1 = warm_tau_growth(filt1, ckpt, mode="implicit", **opts)
+    assert_same(diagrams, cold_diagrams(pts, 2.2))
+    assert ckpt1.tau_max == 2.2 and ckpt1.n_e == filt1.n_e
+
+
+def test_warm_tau_growth_noop_extension():
+    """Growing tau without adding any edge reproduces the old diagrams."""
+    pts = cloud(2, 16)
+    filt0 = build_filtration(points=pts, tau_max=1.5)
+    d0, ckpt = cold_reduce(filt0, mode="implicit", engine="single")
+    gap = 1.5 + 1e-9      # no pairwise distance lands in (1.5, gap]
+    filt1 = build_filtration(points=pts, tau_max=gap)
+    assert filt1.n_e == filt0.n_e
+    d1, _ = warm_tau_growth(filt1, ckpt, mode="implicit", engine="single")
+    assert_same(d1, {d: canonical_diagram(d0[d]) for d in DIMS})
+
+
+def test_warm_tau_growth_rejects_non_extension():
+    pts_a, pts_b = cloud(3, 14), cloud(4, 14)
+    _, ckpt = cold_reduce(build_filtration(points=pts_a, tau_max=1.4),
+                          mode="implicit", engine="single")
+    with pytest.raises(ValueError, match="extend"):
+        warm_tau_growth(build_filtration(points=pts_b, tau_max=2.0), ckpt,
+                        mode="implicit", engine="single")
+    with pytest.raises(ValueError, match="extend"):   # tau shrink
+        warm_tau_growth(build_filtration(points=pts_a, tau_max=0.7), ckpt,
+                        mode="implicit", engine="single")
+
+
+# ---------------------------------------------------------------------------
+# warm start: point arrival
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("opts", ENGINE_CONFIGS)
+def test_warm_point_arrival_bit_identical(opts):
+    pts = cloud(5, 20)
+    _, ckpt = cold_reduce(build_filtration(points=pts, tau_max=1.9),
+                          mode="implicit", **opts)
+    grown = np.concatenate([pts, cloud(6, 7)], axis=0)
+    filt1 = build_filtration(points=grown, tau_max=1.9)
+    diagrams, ckpt1 = warm_point_arrival(filt1, ckpt, mode="implicit",
+                                         **opts)
+    assert_same(diagrams, cold_diagrams(grown, 1.9))
+    assert ckpt1.n == 27
+
+
+def test_warm_point_arrival_with_tau_growth_together():
+    """Arrivals and a larger tau in one update still replay exactly."""
+    pts = cloud(7, 18)
+    _, ckpt = cold_reduce(build_filtration(points=pts, tau_max=1.2),
+                          mode="implicit", engine="single")
+    grown = np.concatenate([pts, cloud(8, 5)], axis=0)
+    filt1 = build_filtration(points=grown, tau_max=2.0)
+    diagrams, _ = warm_point_arrival(filt1, ckpt, mode="implicit",
+                                     engine="single")
+    assert_same(diagrams, cold_diagrams(grown, 2.0))
+
+
+@pytest.mark.parametrize("opts", [ENGINE_CONFIGS[0], ENGINE_CONFIGS[2]])
+def test_chained_updates_bit_identical(opts):
+    """tau growth -> point arrival -> tau growth, each warm, each exact."""
+    pts = cloud(9, 21)
+    _, ckpt = cold_reduce(build_filtration(points=pts, tau_max=1.2),
+                          mode="implicit", **opts)
+    d, ckpt = warm_tau_growth(build_filtration(points=pts, tau_max=1.8),
+                              ckpt, mode="implicit", **opts)
+    assert_same(d, cold_diagrams(pts, 1.8))
+    grown = np.concatenate([pts, cloud(10, 6)], axis=0)
+    d, ckpt = warm_point_arrival(
+        build_filtration(points=grown, tau_max=1.8), ckpt,
+        mode="implicit", **opts)
+    assert_same(d, cold_diagrams(grown, 1.8))
+    d, ckpt = warm_tau_growth(build_filtration(points=grown, tau_max=2.4),
+                              ckpt, mode="implicit", **opts)
+    assert_same(d, cold_diagrams(grown, 2.4))
+
+
+def test_edge_order_map_preserves_relative_order():
+    pts = cloud(11, 15)
+    filt0 = build_filtration(points=pts, tau_max=1.6)
+    _, ckpt = cold_reduce(filt0, mode="implicit", engine="single")
+    grown = np.concatenate([pts, cloud(12, 4)], axis=0)
+    filt1 = build_filtration(points=grown, tau_max=1.6)
+    emap = edge_order_map(ckpt, filt1)
+    assert emap.shape == (filt0.n_e,)
+    assert (np.diff(emap) > 0).all()
+    # the mapped edges are the same vertex pairs at the same lengths
+    assert np.array_equal(filt1.edges[emap], filt0.edges)
+    assert np.array_equal(filt1.edge_len[emap], filt0.edge_len)
+
+
+def test_edge_order_map_rejects_disjoint_cloud():
+    _, ckpt = cold_reduce(build_filtration(points=cloud(13, 12),
+                                           tau_max=1.5),
+                          mode="implicit", engine="single")
+    other = build_filtration(points=cloud(14, 12), tau_max=1.5)
+    with pytest.raises(ValueError):
+        edge_order_map(ckpt, other)
+
+
+# ---------------------------------------------------------------------------
+# batched union reduction
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("opts", [ENGINE_CONFIGS[0], ENGINE_CONFIGS[1],
+                                  ENGINE_CONFIGS[2]])
+def test_batched_union_matches_per_cloud(opts):
+    clouds = [cloud(20 + k, n) for k, n in enumerate((13, 8, 19, 6))]
+    taus = [1.7, 2.4, 1.4, np.inf]
+    filts = [build_filtration(points=p, tau_max=t)
+             for p, t in zip(clouds, taus)]
+    batch = batched_cold_reduce(filts, mode="implicit", **opts)
+    assert len(batch) == len(filts)
+    for k, (diagrams, ckpt) in enumerate(batch):
+        ref = cold_diagrams(clouds[k], taus[k])
+        assert_same(diagrams, ref, ctx=f"cloud {k}")
+        assert ckpt.n == clouds[k].shape[0]
+        assert ckpt.n_e == filts[k].n_e
+
+
+def test_batched_checkpoint_chains_into_warm_updates():
+    """A checkpoint split out of a union batch warm-starts like any other."""
+    clouds = [cloud(30, 16), cloud(31, 11)]
+    filts = [build_filtration(points=p, tau_max=1.5) for p in clouds]
+    batch = batched_cold_reduce(filts, mode="implicit", engine="single")
+    d, _ = warm_tau_growth(build_filtration(points=clouds[0], tau_max=2.3),
+                           batch[0][1], mode="implicit", engine="single")
+    assert_same(d, cold_diagrams(clouds[0], 2.3))
+    grown = np.concatenate([clouds[1], cloud(32, 5)], axis=0)
+    d, _ = warm_point_arrival(
+        build_filtration(points=grown, tau_max=1.5), batch[1][1],
+        mode="implicit", engine="single")
+    assert_same(d, cold_diagrams(grown, 1.5))
+
+
+def test_batched_single_cloud_degenerates_to_cold():
+    pts = cloud(33, 17)
+    filt = build_filtration(points=pts, tau_max=1.8)
+    [(diagrams, _)] = batched_cold_reduce([filt], mode="implicit",
+                                          engine="single")
+    assert_same(diagrams, cold_diagrams(pts, 1.8))
+
+
+def test_canonical_diagram_sorts_and_handles_empty():
+    d = np.array([[2.0, 3.0], [1.0, 5.0], [1.0, 2.0]])
+    out = canonical_diagram(d)
+    assert np.array_equal(out, np.array([[1.0, 2.0], [1.0, 5.0],
+                                         [2.0, 3.0]]))
+    assert canonical_diagram(np.zeros((0, 2))).shape == (0, 2)
+
+
+# ---------------------------------------------------------------------------
+# the serve engine
+# ---------------------------------------------------------------------------
+
+def test_serve_cold_then_hit_then_warm():
+    pts = cloud(40, 19)
+    eng = PHServeEngine(engine="single")
+    eng.submit(PHRequest(uid=0, points=pts, tau_max=1.6, dataset="a"))
+    eng.run()
+    assert eng.done[0].path == "cold"
+    assert_same(eng.done[0].diagrams, cold_diagrams(pts, 1.6))
+    eng.submit(PHRequest(uid=1, points=pts, tau_max=1.6, dataset="a"))
+    eng.run()
+    assert eng.done[1].path == "hit"
+    for d in DIMS:
+        assert np.array_equal(eng.done[1].diagrams[d],
+                              eng.done[0].diagrams[d])
+    eng.submit(PHRequest(uid=2, points=pts, tau_max=2.4, dataset="a"))
+    eng.run()
+    assert eng.done[2].path == "warm_tau"
+    assert_same(eng.done[2].diagrams, cold_diagrams(pts, 2.4))
+
+
+@pytest.mark.parametrize("opts", [ENGINE_CONFIGS[1], ENGINE_CONFIGS[2]])
+def test_serve_warm_paths_exact_on_packed(opts):
+    pts = cloud(41, 18)
+    eng = PHServeEngine(**opts)
+    eng.submit(PHRequest(uid=0, points=pts, tau_max=1.4, dataset="a"))
+    eng.run()
+    eng.submit(PHRequest(uid=1, points=pts, tau_max=2.1, dataset="a"))
+    eng.run()
+    assert eng.done[1].path == "warm_tau"
+    assert_same(eng.done[1].diagrams, cold_diagrams(pts, 2.1))
+    grown = np.concatenate([pts, cloud(42, 6)], axis=0)
+    eng.submit(PHRequest(uid=2, points=grown, tau_max=2.1, dataset="a"))
+    eng.run()
+    assert eng.done[2].path == "warm_points"
+    assert_same(eng.done[2].diagrams, cold_diagrams(grown, 2.1))
+
+
+def test_serve_batched_multi_cloud_matches_per_cloud():
+    clouds = [cloud(50 + k, n) for k, n in enumerate((11, 16, 8, 13, 9))]
+    eng = PHServeEngine(engine="single", max_batch_clouds=3)
+    for uid, p in enumerate(clouds):
+        eng.submit(PHRequest(uid=uid, points=p, tau_max=1.8,
+                             dataset=f"d{uid}"))
+    eng.run()
+    paths = [eng.done[u].path for u in range(len(clouds))]
+    assert paths.count("batched") >= 3       # chunks of 3 then 2
+    for uid, p in enumerate(clouds):
+        assert_same(eng.done[uid].diagrams, cold_diagrams(p, 1.8),
+                    ctx=f"req {uid}")
+    s = eng.stats()
+    assert s["serve_ph_n_batches"] >= 1
+    assert s["serve_ph_batch_clouds_max"] <= 3
+
+
+def test_serve_admission_rejects_below_on_floor():
+    eng = PHServeEngine(memory_budget_bytes=16, engine="single")
+    eng.submit(PHRequest(uid=0, points=cloud(60, 30), tau_max=2.0))
+    eng.run()
+    r = eng.done[0]
+    assert not r.admitted and r.path == "rejected" and r.diagrams is None
+    assert eng.stats()["serve_ph_n_rejected"] == 1
+    # the decision is reproducible from the logged account
+    dec = eng.admission_log[0]
+    replay = eng.admission_account(cloud(60, 30), 2.0)
+    assert (replay.admitted, replay.reason) == (dec.admitted, dec.reason)
+    assert replay.predicted_bytes == dec.predicted_bytes
+
+
+def test_serve_admission_clamps_tau_to_budget():
+    pts = cloud(61, 40)
+    eng = PHServeEngine(memory_budget_bytes=30_000, engine="single")
+    eng.submit(PHRequest(uid=0, points=pts, tau_max=np.inf))
+    eng.run()
+    r = eng.done[0]
+    assert r.admitted and np.isfinite(r.granted_tau)
+    assert "clamped" in r.admission.reason
+    # the served diagram is the cold diagram at the granted tau
+    assert_same(r.diagrams, cold_diagrams(pts, r.granted_tau))
+    # and the realized edge count respects the budget's account
+    filt = build_filtration(points=pts, tau_max=r.granted_tau)
+    assert filt.base_memory_bytes() <= 30_000
+
+
+def test_serve_tenant_isolation_under_store_budget():
+    eng = PHServeEngine(store_budget_bytes=50_000, engine="single")
+    for uid in range(6):
+        eng.submit(PHRequest(uid=uid, points=cloud(70 + uid, 14),
+                             tau_max=2.0, dataset=f"d{uid}",
+                             tenant="a" if uid % 2 else "b"))
+    eng.run()
+    for tenant, nbytes in eng.tenant_bytes().items():
+        assert nbytes <= 50_000, tenant
+    # all requests still answered exactly even when their state was evicted
+    for uid in range(6):
+        assert eng.done[uid].admitted
+
+
+def test_serve_eviction_is_lru_within_tenant():
+    eng = PHServeEngine(store_budget_bytes=1, engine="single")
+    eng.submit(PHRequest(uid=0, points=cloud(80, 12), tau_max=1.8,
+                         dataset="d0"))
+    eng.run()
+    # entry larger than the tenant budget: answered but not cached
+    assert eng.done[0].admitted and not eng.done[0].cached
+    assert eng.tenant_bytes() == {}
+
+
+def test_serve_landmark_cap_and_cache():
+    big = cloud(81, 60)
+    eng = PHServeEngine(landmark_cap=20, engine="single")
+    eng.submit(PHRequest(uid=0, points=big, tau_max=2.5, dataset="big"))
+    eng.run()
+    r0 = eng.done[0]
+    assert r0.n_landmarks == 20 and r0.cover_radius > 0
+    # landmarked result == cold PH of the landmark subcloud
+    from repro.scale.budget import maxmin_landmarks
+    idx, _ = maxmin_landmarks(big, 20, seed=0)
+    assert_same(r0.diagrams, cold_diagrams(big[idx], 2.5))
+    # tau growth on the landmarked dataset reuses the cached landmark set
+    eng.submit(PHRequest(uid=1, points=big, tau_max=3.2, dataset="big"))
+    eng.run()
+    assert eng.done[1].path == "warm_tau"
+    assert_same(eng.done[1].diagrams, cold_diagrams(big[idx], 3.2))
+
+
+def test_serve_maxdim_mismatch_goes_cold():
+    pts = cloud(82, 15)
+    eng = PHServeEngine(engine="single")
+    eng.submit(PHRequest(uid=0, points=pts, tau_max=1.7, dataset="a",
+                         maxdim=2))
+    eng.run()
+    eng.submit(PHRequest(uid=1, points=pts, tau_max=2.2, dataset="a",
+                         maxdim=1))
+    eng.run()
+    assert eng.done[1].path in ("cold", "batched")
+    assert 2 not in eng.done[1].diagrams
+    assert_same(eng.done[1].diagrams, cold_diagrams(pts, 2.2, maxdim=1),
+                dims=(0, 1))
+
+
+def test_fingerprint_is_content_addressed():
+    a = cloud(83, 10)
+    assert fingerprint_points(a) == fingerprint_points(a.copy())
+    assert fingerprint_points(a) != fingerprint_points(a + 1e-12)
+    assert fingerprint_points(a) != fingerprint_points(a[:9])
+
+
+def test_serve_latency_and_store_metrics_populated():
+    eng = PHServeEngine(engine="single")
+    eng.submit(PHRequest(uid=0, points=cloud(84, 12), tau_max=1.8))
+    eng.run()
+    s = eng.stats()
+    assert s["serve_ph_latency_s_count"] == 1
+    assert s["serve_ph_latency_s_sum"] > 0
+    assert s["serve_ph_store_bytes"] > 0
+    assert eng.done[0].latency_s > 0

@@ -26,6 +26,9 @@ DIST_PHASES = ("conc", "sweep", "sync")
 SCALE_PHASES = ("budget", "filtration", "ph")
 SCALE_MEMORY = ("predicted_account_bytes", "observed_peak_harvest_bytes",
                 "budget_drift_ratio")
+SERVE_PHASES = ("cold", "warm")
+SERVE_FIELDS = ("requests_per_s", "cache_hit_ratio", "latency_p50_s",
+                "latency_p95_s")
 
 
 def _check_phases(where: str, entry: Dict, keys) -> List[str]:
@@ -69,7 +72,26 @@ def check_scale(record: Dict) -> List[str]:
     return errors
 
 
-CHECKERS = {"reduce_bench": check_reduce, "scale_smoke": check_scale}
+def check_serve(record: Dict) -> List[str]:
+    errors = _check_phases("serve_bench", record, SERVE_PHASES)
+    for k in SERVE_FIELDS:
+        v = record.get(k)
+        if not isinstance(v, (int, float)) or v < 0:
+            errors.append(f"serve_bench: service-level field {k!r} missing "
+                          f"or negative (got {v!r})")
+    p50, p95 = record.get("latency_p50_s"), record.get("latency_p95_s")
+    if isinstance(p50, (int, float)) and isinstance(p95, (int, float)) \
+            and p95 < p50:
+        errors.append(f"serve_bench: latency_p95_s {p95} < latency_p50_s "
+                      f"{p50}")
+    if record.get("n_warm_verified", 0) < 1:
+        errors.append("serve_bench: no warm response was verified against "
+                      "a cold reduction (n_warm_verified < 1)")
+    return errors
+
+
+CHECKERS = {"reduce_bench": check_reduce, "scale_smoke": check_scale,
+            "serve_bench": check_serve}
 
 
 def check_bench_file(path: str) -> List[str]:
