@@ -1,0 +1,288 @@
+"""Chaos soak: seeded fault schedule over the PH pipeline -> BENCH_resilience.json.
+
+Replays a deterministic :class:`repro.resilience.faults.FaultPlan` against
+every recovery path the repo ships and gates on the two resilience
+contracts (docs/resilience.md):
+
+* **exactness** — diagrams from the faulted distributed reduction are
+  bit-identical to the fault-free run and to the single engine, for every
+  fault class (shard kill at superstep start and mid-superstep, straggler
+  sideline, exchange drop / corrupt / delay, harvest tile failure);
+* **bounded recovery** — mean time-to-recover (the ``resilience_recover_s``
+  histogram: re-deal + backlog adoption work after a shard death) stays
+  under ``--max-mttr``.
+
+The serve soak drives overload and repeated cold failure through
+``PHServeEngine`` and asserts every brown-out is *explicit* (``degraded``
+flag + reason, never an exception, never silently wrong diagrams); the
+checkpoint round bit-flips a saved :class:`ReductionCheckpoint` and
+requires detection + cold fall-back.
+
+    PYTHONPATH=src python -m benchmarks.chaos_soak --rounds 3 \
+        --out BENCH_resilience.json --require-exact --max-mttr 1.0
+
+Everything derives from ``--seed`` — two runs emit identical fault
+histories (and identical diagrams), so a red CI run replays locally.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import numpy as np
+
+
+def _dim_sum(stats: dict, suffix: str) -> float:
+    """Sum a per-dim-prefixed (``h1_``/``h2_``) resilience stat."""
+    return float(sum(v for k, v in stats.items() if k.endswith(suffix)))
+
+
+def _round_plan(seed: int, n_shards: int):
+    """One soak round's deterministic fault schedule (every class)."""
+    from repro.resilience.faults import FaultPlan, FaultSpec
+    rng = np.random.default_rng(seed)
+    kill_when = ("start", "mid")[int(rng.integers(2))]
+    return FaultPlan.of(
+        FaultSpec("harvest.tile", "fail_tile",
+                  at=int(rng.integers(0, 4))),
+        FaultSpec("reduce.superstep", "kill_shard", at=2,
+                  shard=int(rng.integers(n_shards)),
+                  params=(("when", kill_when),)),
+        FaultSpec("reduce.superstep", "slow_shard", at=1,
+                  shard=int(rng.integers(n_shards)),
+                  params=(("lag", 2.0), ("duration", 2))),
+        FaultSpec("exchange.wire", "drop", at=1,
+                  shard=int(rng.integers(n_shards)), times=2),
+        FaultSpec("exchange.wire", "corrupt", at=2,
+                  shard=int(rng.integers(n_shards)),
+                  params=(("bit", int(rng.integers(0, 256))),)),
+        FaultSpec("exchange.wire", "delay", at=3,
+                  shard=int(rng.integers(n_shards)),
+                  params=(("delay_s", 1e-3),)),
+        seed=seed)
+
+
+def _diagram_equal(a: dict, b: dict) -> bool:
+    return set(a) == set(b) and all(
+        np.array_equal(a[d], b[d]) for d in a)
+
+
+def run_reduce_soak(args) -> dict:
+    from repro.core.homology import compute_ph
+    from repro.obs.trace import stopwatch
+    from repro.resilience.faults import inject
+
+    rng = np.random.default_rng(args.seed)
+    kw = dict(tau_max=args.tau, maxdim=2, engine="packed",
+              batch_size=args.batch_size, n_shards=args.n_shards,
+              exchange_every=1)
+    out = {"rounds": [], "n_faults_injected": 0, "n_shard_deaths": 0,
+           "n_redeals": 0, "n_straggler_sidelines": 0,
+           "n_exchange_retries": 0, "n_exchange_deferrals": 0,
+           "n_wire_corruptions": 0, "exact_recovery": True,
+           "mttr_mean_s": 0.0, "mttr_max_s": 0.0}
+    recover_sum = recover_count = 0.0
+    recover_max = 0.0
+    with stopwatch("chaos/reduce") as sw:
+        for r in range(args.rounds):
+            pts = rng.normal(size=(args.cloud_size, 3))
+            clean = compute_ph(pts, **kw)
+            single = compute_ph(pts, tau_max=args.tau, maxdim=2,
+                                engine="single")
+            plan = _round_plan(args.seed + 1000 * r, args.n_shards)
+            with inject(plan) as inj:
+                faulted = compute_ph(pts, **kw)
+                n_fired = len(inj.fired)
+            exact = (_diagram_equal(faulted.diagrams, clean.diagrams)
+                     and _diagram_equal(faulted.diagrams, single.diagrams))
+            st = faulted.stats
+            recover_sum += _dim_sum(st, "resilience_recover_s_sum")
+            recover_count += _dim_sum(st, "resilience_recover_s_count")
+            recover_max = max(recover_max,
+                              max([v for k, v in st.items()
+                                   if k.endswith("resilience_recover_s_max")]
+                                  or [0.0]))
+            out["rounds"].append({"seed": args.seed + 1000 * r,
+                                  "n_fired": n_fired, "exact": exact})
+            out["n_faults_injected"] += n_fired
+            out["exact_recovery"] &= exact
+            for key in ("n_shard_deaths", "n_redeals",
+                        "n_straggler_sidelines", "n_exchange_retries",
+                        "n_exchange_deferrals", "n_wire_corruptions"):
+                out[key] += int(_dim_sum(st, f"resilience_{key}"))
+    out["exact_recovery"] = bool(out["exact_recovery"])
+    out["mttr_mean_s"] = (recover_sum / recover_count
+                          if recover_count else 0.0)
+    out["mttr_max_s"] = float(recover_max)
+    out["wall_s"] = sw.elapsed
+    return out
+
+
+def run_serve_soak(args) -> dict:
+    from repro.obs.trace import stopwatch
+    from repro.resilience.faults import FaultPlan, FaultSpec, inject
+    from repro.serve.ph import PHRequest, PHServeEngine
+
+    rng = np.random.default_rng(args.seed + 7)
+    eng = PHServeEngine(max_cold_retries=1, breaker_threshold=2,
+                        breaker_cooldown_steps=2, seed=args.seed)
+    plan = FaultPlan.of(
+        FaultSpec("serve.step", "overload", at=2),
+        FaultSpec("serve.step", "fail_reduce", at=3, times=2),
+        FaultSpec("serve.step", "fail_reduce", at=4, times=2),
+        seed=args.seed)
+    out = {"n_requests": 0, "n_degraded": 0, "n_ok": 0,
+           "all_degraded_explicit": True, "n_undegraded_wrong": 0}
+    with stopwatch("chaos/serve") as sw:
+        with inject(plan):
+            for step in range(6):
+                pts = rng.normal(size=(24, 3))
+                eng.submit(PHRequest(uid=step, points=pts, tau_max=1.3,
+                                     dataset=f"ds{step}"))
+                eng.step()
+                out["n_requests"] += 1
+        for resp in eng.done.values():
+            if resp.degraded:
+                out["n_degraded"] += 1
+                # the degradation contract: explicit reason, no exception
+                if not resp.degraded_reason:
+                    out["all_degraded_explicit"] = False
+            else:
+                out["n_ok"] += 1
+                if resp.diagrams is None:
+                    out["n_undegraded_wrong"] += 1
+    stats = eng.stats()
+    for key in ("serve_ph_n_shed", "serve_ph_n_circuit_open",
+                "serve_ph_n_cold_retries", "serve_ph_n_degraded"):
+        out[key] = int(stats.get(key, 0))
+    out["wall_s"] = sw.elapsed
+    return out
+
+
+def run_checkpoint_soak(args, tmp_dir: str) -> dict:
+    import os
+
+    from repro.core.filtration import build_filtration
+    from repro.core.resume import ReductionCheckpoint, cold_reduce
+    from repro.obs.trace import stopwatch
+    from repro.resilience.faults import (CheckpointCorruption, FaultPlan,
+                                         FaultSpec, inject)
+
+    rng = np.random.default_rng(args.seed + 13)
+    out = {"n_corruptions_detected": 0, "n_fallbacks_ok": 0,
+           "n_harmless_flips": 0, "all_detected": True}
+    with stopwatch("chaos/checkpoint") as sw:
+        for r in range(args.rounds):
+            pts = rng.normal(size=(32, 3))
+            filt = build_filtration(points=pts, tau_max=args.tau)
+            diags, ck = cold_reduce(filt, maxdim=2)
+            path = os.path.join(tmp_dir, f"ck_{r}.npz")
+            digest = ck.save(path)
+            kind = ("bitflip", "truncate")[r % 2]
+            plan = FaultPlan.of(
+                FaultSpec("resume.load", kind,
+                          params=(("bit", int(rng.integers(0, 1 << 16))),)),
+                seed=args.seed + r)
+            with inject(plan):
+                try:
+                    loaded = ReductionCheckpoint.load(path)
+                    # a flip in zip dead bytes (padding / unread local
+                    # headers) can be a no-op; the contract violated only
+                    # if WRONG content loads without an exception
+                    if loaded.content_hash() == digest:
+                        out["n_harmless_flips"] += 1
+                    else:
+                        out["all_detected"] = False
+                except CheckpointCorruption:
+                    out["n_corruptions_detected"] += 1
+                    # recovery line: fall back to a cold reduction
+                    cold_diags, _ = cold_reduce(filt, maxdim=2)
+                    if _diagram_equal(cold_diags, diags):
+                        out["n_fallbacks_ok"] += 1
+    out["all_detected"] = bool(out["all_detected"])
+    out["wall_s"] = sw.elapsed
+    return out
+
+
+def run(args) -> dict:
+    import tempfile
+
+    reduce_soak = run_reduce_soak(args)
+    serve_soak = run_serve_soak(args)
+    with tempfile.TemporaryDirectory() as tmp:
+        ckpt_soak = run_checkpoint_soak(args, tmp)
+    record = {
+        "benchmark": "chaos_soak",
+        "seed": args.seed,
+        "rounds": args.rounds,
+        "n_shards": args.n_shards,
+        "cloud_size": args.cloud_size,
+        "reduce": reduce_soak,
+        "serve": serve_soak,
+        "checkpoint": ckpt_soak,
+        "n_faults_injected": (reduce_soak["n_faults_injected"]
+                              + serve_soak["serve_ph_n_degraded"]
+                              + ckpt_soak["n_corruptions_detected"]),
+        "exact_recovery": reduce_soak["exact_recovery"],
+        "mttr_mean_s": reduce_soak["mttr_mean_s"],
+        "mttr_max_s": reduce_soak["mttr_max_s"],
+        "phases": {
+            "reduce": reduce_soak["wall_s"],
+            "serve": serve_soak["wall_s"],
+            "checkpoint": ckpt_soak["wall_s"],
+        },
+    }
+    return record
+
+
+def gate(record: dict, args) -> list:
+    failures = []
+    if record["reduce"]["n_faults_injected"] < 1:
+        failures.append("no reduction fault ever fired - dead soak")
+    if args.require_exact and not record["exact_recovery"]:
+        bad = [r for r in record["reduce"]["rounds"] if not r["exact"]]
+        failures.append(f"recovery not exact in rounds {bad}")
+    if args.max_mttr is not None and record["mttr_mean_s"] > args.max_mttr:
+        failures.append(f"mean MTTR {record['mttr_mean_s']:.4f}s exceeds "
+                        f"--max-mttr {args.max_mttr}")
+    if not record["serve"]["all_degraded_explicit"]:
+        failures.append("a degraded serve response carried no reason")
+    if record["serve"]["n_undegraded_wrong"]:
+        failures.append("an un-degraded response had no diagrams")
+    if not record["checkpoint"]["all_detected"]:
+        failures.append("a corrupted checkpoint loaded without detection")
+    if record["checkpoint"]["n_fallbacks_ok"] \
+            != record["checkpoint"]["n_corruptions_detected"]:
+        failures.append("cold fall-back after corruption was not exact")
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--rounds", type=int, default=3)
+    ap.add_argument("--cloud-size", type=int, default=48)
+    ap.add_argument("--tau", type=float, default=1.2)
+    ap.add_argument("--batch-size", type=int, default=16)
+    ap.add_argument("--n-shards", type=int, default=4)
+    ap.add_argument("--out", default="BENCH_resilience.json")
+    ap.add_argument("--require-exact", action="store_true",
+                    help="fail unless every faulted run is bit-identical")
+    ap.add_argument("--max-mttr", type=float, default=None,
+                    help="fail if mean recovery time exceeds this (s)")
+    args = ap.parse_args(argv)
+
+    record = run(args)
+    with open(args.out, "w", encoding="utf-8") as f:
+        json.dump(record, f, indent=2)
+    print(f"wrote {args.out}: {record['n_faults_injected']} faults, "
+          f"exact={record['exact_recovery']}, "
+          f"mttr_mean={record['mttr_mean_s']:.4f}s")
+    failures = gate(record, args)
+    for failure in failures:
+        print(f"GATE FAIL: {failure}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

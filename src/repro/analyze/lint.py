@@ -34,6 +34,18 @@ code review away from hitting):
   ``with`` context item (or via the ``traced()`` decorator).  A bare
   call creates a context manager that is never entered/exited, so the
   span silently never closes — especially on exception paths.
+* ``bare-except`` — recovery paths must catch *typed* faults
+  (``TransientFault``, ``WireCorruption``, ``CheckpointCorruption``, …).
+  A bare ``except:`` swallows ``KeyboardInterrupt``/``SystemExit`` and —
+  worse for this repo — silently absorbs injected faults the resilience
+  suite relies on propagating, turning a CI-gated exactness failure into
+  a wrong-answer run.
+* ``retry-without-backoff`` — a retry loop that sleeps a *constant*
+  between attempts hammers a struggling peer in lockstep and replays
+  differently under load; use
+  :func:`repro.resilience.faults.retry_with_backoff`, whose jittered
+  exponential schedule is deterministic given its seed.  Sleeps of a
+  computed (non-constant) duration are assumed to be such a schedule.
 
 Deliberate exceptions are suppressed in place with a *justified* pragma
 on the offending line (or the line above)::
@@ -61,6 +73,8 @@ __all__ = [
     "UnseededRngRule",
     "RawTimingRule",
     "SpanLeakRule",
+    "BareExceptRule",
+    "RetryWithoutBackoffRule",
     "default_rules",
     "lint_source",
     "lint_file",
@@ -566,10 +580,90 @@ class SpanLeakRule(Rule):
         return findings
 
 
+class BareExceptRule(Rule):
+    """Exception handlers must name what they recover from.
+
+    A bare ``except:`` catches ``KeyboardInterrupt``/``SystemExit`` and
+    every injected fault the resilience suite expects to propagate —
+    recovery code that swallows :class:`~repro.resilience.faults
+    .CheckpointCorruption` or a :class:`~repro.resilience.faults
+    .TransientFault` whose retry budget is spent converts a loud,
+    CI-gated failure into silently wrong state.  Catch the typed fault
+    (or at widest ``Exception``) instead.
+    """
+
+    name = "bare-except"
+
+    def check(self, tree: ast.Module, source: str,
+              relpath: str) -> List[Finding]:
+        findings: List[Finding] = []
+        for node in ast.walk(tree):
+            if isinstance(node, ast.ExceptHandler) and node.type is None:
+                findings.append(self._finding(
+                    relpath, node,
+                    "bare `except:` swallows KeyboardInterrupt and injected "
+                    "faults; catch the typed fault the recovery path "
+                    "actually handles (TransientFault, WireCorruption, "
+                    "CheckpointCorruption, ... or at widest Exception)"))
+        return findings
+
+
+class RetryWithoutBackoffRule(Rule):
+    """Retry loops must back off, not hammer at a fixed cadence.
+
+    Flags a ``time.sleep`` (or bare ``sleep`` imported from ``time``)
+    with a *constant* duration inside a ``for``/``while`` loop that also
+    contains a ``try``/``except`` — the signature of a hand-rolled retry
+    loop.  Fixed-interval retries pile onto a struggling peer in
+    lockstep and make the failure history irreproducible; use
+    ``repro.resilience.faults.retry_with_backoff`` (deterministic
+    jittered exponential schedule).  A sleep whose duration is computed
+    is assumed to already be such a schedule.
+    """
+
+    name = "retry-without-backoff"
+
+    def check(self, tree: ast.Module, source: str,
+              relpath: str) -> List[Finding]:
+        imported = self._imported_sleep(tree)
+        findings: List[Finding] = []
+        for loop in ast.walk(tree):
+            if not isinstance(loop, (ast.For, ast.AsyncFor, ast.While)):
+                continue
+            if not any(isinstance(sub, ast.Try) for sub in ast.walk(loop)):
+                continue
+            for node in ast.walk(loop):
+                if isinstance(node, ast.Call) \
+                        and self._is_sleep(node.func, imported) \
+                        and node.args \
+                        and isinstance(node.args[0], ast.Constant):
+                    findings.append(self._finding(
+                        relpath, node,
+                        "constant-interval sleep in a retry loop; use "
+                        "repro.resilience.faults.retry_with_backoff for a "
+                        "deterministic jittered exponential schedule"))
+        return findings
+
+    def _is_sleep(self, func: ast.AST, imported: Set[str]) -> bool:
+        chain = self._attr_chain(func)
+        if chain == ("time", "sleep"):
+            return True
+        return isinstance(func, ast.Name) and func.id in imported
+
+    @staticmethod
+    def _imported_sleep(tree: ast.Module) -> Set[str]:
+        names: Set[str] = set()
+        for node in ast.walk(tree):
+            if isinstance(node, ast.ImportFrom) and node.module == "time":
+                names.update(a.asname or a.name for a in node.names
+                             if a.name == "sleep")
+        return names
+
+
 def default_rules() -> List[Rule]:
     return [RefMutationRule(), HostSyncRule(), RawFiltrationSortRule(),
             DtypeBoundaryRule(), UnseededRngRule(), RawTimingRule(),
-            SpanLeakRule()]
+            SpanLeakRule(), BareExceptRule(), RetryWithoutBackoffRule()]
 
 
 _ALLOW = re.compile(

@@ -14,6 +14,7 @@ one mesh restores onto any other (elastic re-mesh path, exercised by
 """
 from __future__ import annotations
 
+import hashlib
 import json
 import os
 import shutil
@@ -24,6 +25,11 @@ import jax
 import numpy as np
 
 from repro.dist.sharding import tree_path_str
+from repro.resilience.faults import CheckpointCorruption
+
+
+def _leaf_digest(arr: np.ndarray) -> str:
+    return hashlib.sha256(np.ascontiguousarray(arr).tobytes()).hexdigest()
 
 
 def _leaf_files(tree) -> Dict[str, Any]:
@@ -67,7 +73,8 @@ class Checkpointer:
         for name, leaf in leaves.items():
             np.save(os.path.join(tmp, name + ".npy"), leaf)
             manifest["leaves"][name] = {
-                "shape": list(leaf.shape), "dtype": str(leaf.dtype)}
+                "shape": list(leaf.shape), "dtype": str(leaf.dtype),
+                "sha256": _leaf_digest(leaf)}
         with open(os.path.join(tmp, "manifest.json"), "w") as f:
             json.dump(manifest, f)
         if os.path.exists(final):
@@ -94,16 +101,27 @@ class Checkpointer:
         return steps[-1] if steps else None
 
     def restore(self, template, step: Optional[int] = None,
-                shardings=None):
+                shardings=None, verify: bool = True):
         """Restore into the structure of ``template``; if ``shardings`` is a
         matching tree of NamedShardings the leaves are placed sharded (the
-        reshard-on-restore path for elastic re-meshing)."""
+        reshard-on-restore path for elastic re-meshing).
+
+        With ``verify`` (the default) every leaf whose manifest entry
+        carries a ``sha256`` is re-hashed after load; a mismatch — bit rot,
+        a torn write that beat the atomic rename, a truncated .npy — raises
+        :class:`~repro.resilience.faults.CheckpointCorruption` instead of
+        silently restoring wrong weights.  Pre-hash checkpoints (no
+        ``sha256`` field) restore unverified for compatibility."""
         step = step if step is not None else self.latest_step()
         if step is None:
             raise FileNotFoundError(f"no checkpoints in {self.dir}")
         d = os.path.join(self.dir, f"step_{step:010d}")
-        with open(os.path.join(d, "manifest.json")) as f:
-            manifest = json.load(f)
+        try:
+            with open(os.path.join(d, "manifest.json")) as f:
+                manifest = json.load(f)
+        except (OSError, json.JSONDecodeError) as e:
+            raise CheckpointCorruption(
+                f"unreadable manifest in {d!r}: {e}") from e
 
         flat, treedef = jax.tree_util.tree_flatten_with_path(template)
         shard_flat = None
@@ -113,9 +131,20 @@ class Checkpointer:
         leaves = []
         for i, (kp, leaf) in enumerate(flat):
             name = tree_path_str(kp).replace("/", "__")
-            arr = np.load(os.path.join(d, name + ".npy"))
-            expect = manifest["leaves"][name]
-            assert list(arr.shape) == expect["shape"], (name, arr.shape)
+            try:
+                arr = np.load(os.path.join(d, name + ".npy"))
+                expect = manifest["leaves"][name]
+            except (OSError, ValueError, KeyError) as e:
+                raise CheckpointCorruption(
+                    f"unreadable leaf {name!r} in {d!r}: {e}") from e
+            if list(arr.shape) != expect["shape"]:
+                raise CheckpointCorruption(
+                    f"leaf {name!r} shape {list(arr.shape)} != manifest "
+                    f"{expect['shape']} in {d!r}")
+            if verify and expect.get("sha256") is not None \
+                    and _leaf_digest(arr) != expect["sha256"]:
+                raise CheckpointCorruption(
+                    f"leaf {name!r} failed sha256 verification in {d!r}")
             if shard_flat is not None:
                 leaves.append(jax.device_put(arr, shard_flat[i]))
             else:
@@ -123,3 +152,24 @@ class Checkpointer:
                               if hasattr(leaf, "dtype") else arr)
         return jax.tree_util.tree_unflatten(treedef, leaves), \
             manifest["metadata"]
+
+    def restore_latest_valid(self, template, shardings=None):
+        """Walk checkpoints newest-first, restoring the first one that
+        passes verification — the fall-back-to-older-step recovery line
+        when the latest save is corrupt.  Returns ``(tree, metadata,
+        step)``; raises :class:`CheckpointCorruption` when every step is
+        bad and ``FileNotFoundError`` when there are none."""
+        steps = self.all_steps()
+        if not steps:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        last_err: Optional[Exception] = None
+        for step in reversed(steps):
+            try:
+                tree, meta = self.restore(template, step=step,
+                                          shardings=shardings)
+                return tree, meta, step
+            except CheckpointCorruption as e:
+                last_err = e
+        raise CheckpointCorruption(
+            f"every checkpoint in {self.dir!r} is corrupt; "
+            f"last error: {last_err}")

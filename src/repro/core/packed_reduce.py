@@ -97,8 +97,11 @@ from ..analyze.invariants import active_sanitizer
 from ..kernels.gf2 import (NO_LOW, find_low_np, scatter_bits,
                            scatter_xor_bits, set_bit_positions,
                            stack_wire_payloads, unstack_wire_payloads)
+from ..launch.elastic import ShardSupervisor
 from ..obs.metrics import MetricsRegistry
 from ..obs.trace import Tracer, active_tracer, critical_path
+from ..resilience.faults import (TransientFault, active_injector,
+                                 corrupt_payload, retry_with_backoff)
 from .pairing import EMPTY_KEY
 from .reduction import (DimensionAdapter, PivotStore, ReductionResult,
                         clearance_commit, clearing_filter, finalize_result,
@@ -807,7 +810,8 @@ def reduce_dimension_packed(
     store = PivotStore(adapter, mode, store_budget_bytes=store_budget_bytes,
                        cache=cache, commit_log=commit_log)
     if P > 1:
-        from .pivot_cache import decode_commit_delta, encode_commit_delta
+        from .pivot_cache import (decode_commit_delta, encode_commit_delta,
+                                  verify_commit_delta)
         # the replica mirrors the authority's track_gens: with an explicit
         # budgeted store the wire ships δ-expansions precisely so that
         # replica probes can return them (install() never spills, so the
@@ -824,8 +828,31 @@ def reduce_dimension_packed(
         # the provenance that drives the sweep's critical-path accounting
         shard_logs: List[list] = [[] for _ in range(P)]
         pending: Dict[int, Tuple[int, int]] = {}
+        # -- resilience (docs/resilience.md): heartbeat supervision on the
+        # deterministic superstep clock.  Every live shard beats once per
+        # superstep; a shard that misses a beat past the timeout is dead
+        # and its remaining batch queue re-deals to the survivors from the
+        # last exact commit sweep (nothing commits before the sweep, so
+        # the restart line is exact by construction).  Stragglers are
+        # sidelined from dealing for a cooldown but stay live.  An armed
+        # FaultInjector (repro.resilience) is what kills/slows shards and
+        # drops/corrupts wire payloads — on a seeded, reproducible
+        # schedule; with none armed this is all no-op bookkeeping.
+        sup = ShardSupervisor(n_shards=P, timeout=0.75, factor=3.0,
+                              sideline=1)
+        inj = active_injector()
+        killed: set = set()
+        slow_lag: Dict[int, Tuple[float, int]] = {}  # shard -> (lag, until)
+        n_shard_deaths = 0
+        n_redeals = 0
+        n_sidelines = 0
+        n_exchange_retries = 0
+        n_exchange_deferrals = 0
+        n_wire_corruptions = 0
+        n_faults_seen = 0
     else:
         lookup_store = store
+        inj = None
     pairs: List[tuple] = []
     essentials: List[float] = []
     essential_ids: List[int] = []
@@ -854,12 +881,73 @@ def reduce_dimension_packed(
 
     pos = 0
     while pos < len(queue):
-        # ---- superstep: the next up-to-P batches, dealt round-robin
-        # (batch t -> shard t % P); slice k is shard k's local batch ----
+        # ---- superstep: the next up-to-|active| batches, dealt
+        # round-robin over the supervisor's active shards (all P when
+        # nothing failed); slice k is shard active[k]'s local batch ----
         n_supersteps += 1
+        step = n_supersteps
+        mid_kills: List[int] = []
+        if P > 1:
+            if inj is not None:
+                for s in list(sup.live):
+                    for f in inj.fire("reduce.superstep", index=step,
+                                      shard=s):
+                        if f.kind in ("kill_shard", "slow_shard") \
+                                and mesh is not None:
+                            raise ValueError(
+                                f"{f.kind} injection requires the "
+                                "host-partitioned driver (mesh=None): a "
+                                "jax mesh cannot shrink mid-collective")
+                        n_faults_seen += 1
+                        if f.kind == "kill_shard":
+                            if f.param("when", "start") == "mid":
+                                # participates in the concurrent phase,
+                                # dies before its commit sweep
+                                mid_kills.append(s)
+                            else:
+                                killed.add(s)
+                        elif f.kind == "slow_shard":
+                            # beat lag clamped below the death timeout:
+                            # "slow" degrades, it does not kill
+                            slow_lag[s] = (
+                                min(float(f.param("lag", 0.6)), 0.6),
+                                step + int(f.param("duration", 1)))
+            beats: Dict[int, float] = {}
+            for s in sup.live:
+                if s in killed:
+                    continue                  # a dead shard stops beating
+                lag = slow_lag.get(s)
+                beats[s] = (float(step) - lag[0]
+                            if lag is not None and step <= lag[1]
+                            else float(step))
+            plan = sup.observe(float(step), beats)
+            if not sup.live:
+                raise RuntimeError(
+                    "every reduction shard died; cannot recover")
+            if plan.dead:
+                # re-deal the dead shards' remaining queue to survivors
+                # (automatic: dealing below only feeds active shards) and
+                # hand their un-replicated wire backlog to an heir so the
+                # replicas eventually hear about those commits
+                with tl.span("resilience/recover", step=step,
+                             kind="kill_start",
+                             shards=tuple(plan.dead)) as rsp:
+                    n_shard_deaths += len(plan.dead)
+                    n_redeals += 1
+                    heir = sup.live[0]
+                    for d in plan.dead:
+                        if shard_logs[d]:
+                            shard_logs[heir].extend(shard_logs[d])
+                            shard_logs[d] = []
+                reg.histogram("resilience_recover_s").observe(rsp.dur)
+            if plan.stragglers:
+                n_sidelines += len(plan.stragglers)
+            active = plan.active
+        else:
+            active = [0]
         slice_sizes = []
         start = pos
-        for _ in range(P):
+        for _ in range(len(active)):
             if pos >= len(queue):
                 break
             take = min(eff_batch, len(queue) - pos)
@@ -879,7 +967,6 @@ def reduce_dimension_packed(
         # fused block ops split by row share (the ``weights`` attr),
         # per-slice work on its own device lane, sync parts at full cost
         wt = tuple(float(sz) / max(B, 1) for sz in slice_sizes)
-        step = n_supersteps
         t_fused = 0.0
         t_slice = np.zeros(max(n_slices, 1))
         t_seq = 0.0
@@ -972,6 +1059,37 @@ def reduce_dimension_packed(
                     lookup_store.lookup_addends_batched(probe_lows, ids_arr)
                 addend_lows = probe_lows
             t_fused += sp.dur
+
+        if P > 1 and mid_kills:
+            # the shard died after its concurrent phase but before its
+            # commit sweep: nothing of this superstep has committed, so
+            # the last commit sweep is still the exact recovery line —
+            # discard the superstep and restart it from ``start`` with
+            # the survivors (bit-identical: commits replay in the same
+            # global batch order, just dealt to fewer shards)
+            with tl.span("resilience/recover", step=step, kind="kill_mid",
+                         shards=tuple(mid_kills)) as rsp:
+                for s in mid_kills:
+                    killed.add(s)
+                    sup.kill(s)
+                n_shard_deaths += len(mid_kills)
+                n_redeals += 1
+                if sup.live:
+                    heir = sup.live[0]
+                    for s in mid_kills:
+                        if shard_logs[s]:
+                            shard_logs[heir].extend(shard_logs[s])
+                            shard_logs[s] = []
+            if not sup.live:
+                raise RuntimeError(
+                    "every reduction shard died; cannot recover")
+            # time-to-recover = the discarded concurrent work + the
+            # bookkeeping above (the re-dealt batches rerun next loop)
+            reg.histogram("resilience_recover_s").observe(
+                t_fused + float(t_slice[:max(n_slices, 1)].sum())
+                + t_seq + rsp.dur)
+            pos = start
+            continue
 
         # ---- exact commit sweep, slice by slice in global batch order:
         # re-probe the *authoritative* store until stable, then
@@ -1067,7 +1185,7 @@ def reduce_dimension_packed(
                     if not store.track_gens:
                         for r in fresh:
                             r["gens"] = None
-                    shard_logs[k].extend(fresh)
+                    shard_logs[active[k]].extend(fresh)
                     for r in fresh:
                         pending[r["low"]] = (k, n_supersteps)
                     del commit_log[log_mark:]
@@ -1108,10 +1226,62 @@ def reduce_dimension_packed(
             n_exchange_rounds += 1
             t_enc = np.zeros(P)
             payloads = []
+            shipped_lows: List[List[int]] = []
             for k in range(P):
                 with tl.span("reduce/encode", lane=k, step=step) as sp:
                     payloads.append(encode_commit_delta(shard_logs[k]))
+                shipped_lows.append([r["low"] for r in shard_logs[k]])
                 t_enc[k] = sp.dur
+            # wire-level faults: each payload's delivery gets a bounded
+            # retry with deterministic jittered backoff (the schedule is
+            # accounted, not slept — this transport is host-simulated); a
+            # payload that exhausts its budget is *deferred* — an empty
+            # payload ships in its slot and its backlog + pending lows
+            # survive to the next round, exact by the same staleness
+            # argument as the exchange cadence itself
+            delivered = [True] * P
+            if inj is not None:
+                empty_payload = encode_commit_delta([])
+
+                def note_retry(a, e, delay):
+                    nonlocal n_exchange_retries
+                    n_exchange_retries += 1
+                    reg.histogram("resilience_backoff_s").observe(delay)
+
+                for k in range(P):
+                    def attempt(a, k=k, buf0=payloads[k]):
+                        nonlocal n_faults_seen, n_wire_corruptions
+                        buf = buf0
+                        for f in inj.fire("exchange.wire",
+                                          index=n_exchange_rounds,
+                                          shard=k):
+                            n_faults_seen += 1
+                            if f.kind == "drop":
+                                raise TransientFault(
+                                    f"exchange payload {k} dropped")
+                            if f.kind == "corrupt":
+                                buf = corrupt_payload(
+                                    buf, int(f.param("bit", 17)))
+                            elif f.kind == "delay":
+                                reg.histogram(
+                                    "resilience_backoff_s").observe(
+                                    float(f.param("delay_s", 1e-3)))
+                        if not verify_commit_delta(buf):
+                            n_wire_corruptions += 1
+                            raise TransientFault(
+                                f"exchange payload {k} corrupt on the "
+                                "wire (checksum)")
+                        return buf
+
+                    try:
+                        payloads[k] = retry_with_backoff(
+                            attempt, attempts=3, base_s=1e-4,
+                            seed=(n_exchange_rounds << 8) | k,
+                            sleep=None, on_retry=note_retry)
+                    except TransientFault:
+                        n_exchange_deferrals += 1
+                        payloads[k] = empty_payload
+                        delivered[k] = False
             wire = sum(p.nbytes for p in payloads)
             exchange_bytes += wire
             with tl.span("reduce/exchange", step=step,
@@ -1122,8 +1292,11 @@ def reduce_dimension_packed(
                                         rec["mode"], rec["column"],
                                         rec["gens"])
             sim_wall_book += float(t_enc.max()) + sp.dur
-            shard_logs = [[] for _ in range(P)]
-            pending.clear()
+            for k in range(P):
+                if delivered[k]:
+                    for low in shipped_lows[k]:
+                        pending.pop(low, None)
+                    shard_logs[k] = []
 
     if san is not None:
         san.set_context(superstep=None, batch=None, slice=None)
@@ -1150,6 +1323,15 @@ def reduce_dimension_packed(
     reg.counter("n_tournament_reductions").inc(n_tournament_reductions)
     reg.counter("n_sweep_probes").inc(n_sweep_probes)
     reg.counter("exchange_bytes").inc(exchange_bytes)
+    if P > 1:
+        reg.counter("resilience_n_faults").inc(n_faults_seen)
+        reg.counter("resilience_n_shard_deaths").inc(n_shard_deaths)
+        reg.counter("resilience_n_redeals").inc(n_redeals)
+        reg.counter("resilience_n_straggler_sidelines").inc(n_sidelines)
+        reg.counter("resilience_n_exchange_retries").inc(n_exchange_retries)
+        reg.counter("resilience_n_exchange_deferrals").inc(
+            n_exchange_deferrals)
+        reg.counter("resilience_n_wire_corruptions").inc(n_wire_corruptions)
     for key, val in cp.items():
         reg.gauge(key).set(val)
     reg.gauge("sim_wall_bookkeeping_s").set(sim_wall_book)

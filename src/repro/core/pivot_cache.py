@@ -32,6 +32,7 @@ unit of the distributed engine:
 """
 from __future__ import annotations
 
+import zlib
 from collections import OrderedDict
 from typing import Dict, List, Optional, Sequence
 
@@ -39,8 +40,10 @@ import numpy as np
 
 from ..analyze.invariants import active_sanitizer
 from ..obs.metrics import MetricsRegistry
+from ..resilience.faults import WireCorruption
 
-__all__ = ["PackedPivotCache", "encode_commit_delta", "decode_commit_delta"]
+__all__ = ["PackedPivotCache", "encode_commit_delta", "decode_commit_delta",
+           "verify_commit_delta"]
 
 _MODE_CODE = {"explicit": 0, "implicit": 1}
 _CODE_MODE = {0: "explicit", 1: "implicit"}
@@ -177,14 +180,20 @@ def encode_commit_delta(records: Sequence[dict]) -> np.ndarray:
         gens.append(empty if g is None
                     else np.sort(np.ascontiguousarray(g, dtype=np.int64)))
     body = pack_column_payload(cols + gens)
-    header = np.array([_DELTA_MAGIC, n, body.size, 0], dtype=np.uint32)
-    payload = np.concatenate([
-        header,
+    tail = np.concatenate([
         lows.view(np.uint32) if n else np.zeros(0, dtype=np.uint32),
         ids.view(np.uint32) if n else np.zeros(0, dtype=np.uint32),
         modes,
         body,
     ])
+    # header slot 3: CRC32 over the other header words AND the tail — the
+    # length fields must be covered too, or a flipped bit in `n` passes
+    # the check and mis-slices the decode
+    head = np.array([_DELTA_MAGIC, n, body.size], dtype=np.uint32)
+    crc = np.uint32(zlib.crc32(head.tobytes() + tail.tobytes())
+                    & 0xFFFFFFFF)
+    header = np.array([_DELTA_MAGIC, n, body.size, crc], dtype=np.uint32)
+    payload = np.concatenate([header, tail])
     san = active_sanitizer()
     if san is not None:
         # the replica installs exactly what decodes: check the round-trip
@@ -193,13 +202,32 @@ def encode_commit_delta(records: Sequence[dict]) -> np.ndarray:
     return payload
 
 
+def verify_commit_delta(payload: np.ndarray) -> bool:
+    """Cheap receiver-side integrity check: header magic + CRC32 of the
+    payload tail against header slot 3.  ``True`` iff the payload would
+    decode to the records that produced it."""
+    w = np.ascontiguousarray(payload, dtype=np.uint32)
+    if w.size < 4 or w[0] != _DELTA_MAGIC:
+        return False
+    crc = np.uint32(zlib.crc32(w[:3].tobytes() + w[4:].tobytes())
+                    & 0xFFFFFFFF)
+    return bool(crc == w[3])
+
+
 def decode_commit_delta(payload: np.ndarray) -> List[dict]:
-    """Inverse of :func:`encode_commit_delta`."""
+    """Inverse of :func:`encode_commit_delta`.
+
+    Raises :class:`~repro.resilience.faults.WireCorruption` (a
+    ``ValueError``) on a bad magic word or checksum mismatch — a corrupt
+    exchange payload is *rejected for retransmission*, never installed
+    into a replica store."""
     from ..dist.compression import unpack_column_payload
 
     w = np.ascontiguousarray(payload, dtype=np.uint32)
     if w.size < 4 or w[0] != _DELTA_MAGIC:
-        raise ValueError("not a commit-delta payload")
+        raise WireCorruption("not a commit-delta payload")
+    if not verify_commit_delta(w):
+        raise WireCorruption("commit-delta checksum mismatch")
     n = int(w[1])
     body_len = int(w[2])
     off = 4

@@ -36,16 +36,28 @@ a fresh checkpoint, so updates chain.  Capture requires tracked
 from __future__ import annotations
 
 import dataclasses
+import hashlib
+import io
+import os
 from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
+from ..resilience.faults import CheckpointCorruption, active_injector, flip_bit
 from .filtration import Filtration, filtration_from_edges
 from .h0 import compute_h0
 from .homology import h2_columns, make_h1_adapter, make_h2_adapter
 from .reduction import reduce_dimension
 
 _KEY_MASK = np.int64((1 << 32) - 1)
+
+#: on-disk format version of ReductionCheckpoint.save; bumped on layout
+#: changes so a stale file is rejected as corrupt, never misparsed
+CHECKPOINT_VERSION = 1
+
+# ordinal of ReductionCheckpoint.load calls in this process — the
+# occurrence index the ``resume.load`` injection point fires against
+_LOAD_ORDINAL = 0
 
 
 @dataclasses.dataclass
@@ -87,6 +99,139 @@ class ReductionCheckpoint:
     def nbytes(self) -> int:
         return int(self.edges.nbytes
                    + sum(d.nbytes() for d in self.dims.values()))
+
+    # ---- integrity + versioned persistence (docs/resilience.md) ----
+
+    def content_hash(self) -> str:
+        """sha256 over the checkpoint's entire replayable content.
+
+        Scalars, edges, and every DimState array (gens in sorted col-id
+        order) feed one canonical byte stream — two checkpoints hash equal
+        iff a warm restart from them is bit-identical."""
+        h = hashlib.sha256()
+        h.update(np.array([self.n, self.n_e, self.maxdim],
+                          dtype=np.int64).tobytes())
+        h.update(np.float64(self.tau_max).tobytes())
+        h.update(np.ascontiguousarray(self.edges, dtype=np.int32).tobytes())
+        for d in sorted(self.dims):
+            st = self.dims[d]
+            h.update(np.int64(d).tobytes())
+            for arr in (st.pairs, st.pair_cols, st.essentials,
+                        st.essential_ids, st.pivot_lows, st.pivot_cols):
+                h.update(np.ascontiguousarray(arr).tobytes())
+            for cid in sorted(st.gens):
+                h.update(np.int64(cid).tobytes())
+                h.update(np.ascontiguousarray(st.gens[cid],
+                                              dtype=np.int64).tobytes())
+        return h.hexdigest()
+
+    def save(self, path: str) -> str:
+        """Versioned, hash-stamped save (npz).  Atomic: writes to a temp
+        sibling and renames, so a crashed save never shadows a good file.
+        Returns :meth:`content_hash`."""
+        digest = self.content_hash()
+        arrays: Dict[str, np.ndarray] = {
+            "__meta__": np.array([CHECKPOINT_VERSION, self.n, self.n_e,
+                                  self.maxdim], dtype=np.int64),
+            "__tau__": np.float64([self.tau_max]),
+            "__hash__": np.frombuffer(bytes.fromhex(digest),
+                                      dtype=np.uint8).copy(),
+            "edges": np.ascontiguousarray(self.edges, dtype=np.int32),
+        }
+        for d, st in self.dims.items():
+            p = f"dim{d}_"
+            arrays[p + "pairs"] = st.pairs
+            arrays[p + "pair_cols"] = st.pair_cols
+            arrays[p + "essentials"] = st.essentials
+            arrays[p + "essential_ids"] = st.essential_ids
+            arrays[p + "pivot_lows"] = st.pivot_lows
+            arrays[p + "pivot_cols"] = st.pivot_cols
+            ids = np.array(sorted(st.gens), dtype=np.int64)
+            arrays[p + "gen_ids"] = ids
+            offs = np.zeros(ids.size + 1, dtype=np.int64)
+            data = [np.ascontiguousarray(st.gens[int(c)], dtype=np.int64)
+                    for c in ids]
+            if data:
+                np.cumsum([g.size for g in data], out=offs[1:])
+            arrays[p + "gen_offsets"] = offs
+            arrays[p + "gen_data"] = (np.concatenate(data) if data
+                                      else np.zeros(0, dtype=np.int64))
+        tmp = path + ".tmp"
+        with open(tmp, "wb") as f:
+            np.savez_compressed(f, **arrays)
+        os.replace(tmp, path)
+        return digest
+
+    @classmethod
+    def load(cls, path: str) -> "ReductionCheckpoint":
+        """Inverse of :meth:`save` with integrity checking.
+
+        Raises :class:`~repro.resilience.faults.CheckpointCorruption` on a
+        truncated/unparseable file, an unsupported format version, or a
+        content-hash mismatch — callers fall back to a cold reduction (the
+        detect-corrupt -> fall-back-to-cold contract shared with
+        ``checkpoint.Checkpointer``).  The ``resume.load`` injection point
+        fires here, corrupting the *in-memory* read buffer so tests and
+        the chaos soak exercise every rejection path without touching the
+        file on disk."""
+        global _LOAD_ORDINAL
+        _LOAD_ORDINAL += 1
+        with open(path, "rb") as f:
+            raw = f.read()
+        inj = active_injector()
+        if inj is not None:
+            for fault in inj.fire("resume.load", index=_LOAD_ORDINAL,
+                                  path=path):
+                if fault.kind == "bitflip":
+                    raw = flip_bit(raw, int(fault.param("bit", 12345)))
+                elif fault.kind == "truncate":
+                    raw = raw[:max(1, len(raw) // 2)]
+        try:
+            with np.load(io.BytesIO(raw), allow_pickle=False) as z:
+                arrays = {k: z[k] for k in z.files}
+        except Exception as e:
+            raise CheckpointCorruption(
+                f"unreadable checkpoint {path!r}: {e}") from e
+        try:
+            meta = arrays["__meta__"]
+            version = int(meta[0])
+            if version != CHECKPOINT_VERSION:
+                raise CheckpointCorruption(
+                    f"checkpoint {path!r} has version {version}, "
+                    f"expected {CHECKPOINT_VERSION}")
+            dims: Dict[int, DimState] = {}
+            for d in (1, 2):
+                p = f"dim{d}_"
+                if p + "pairs" not in arrays:
+                    continue
+                ids = arrays[p + "gen_ids"]
+                offs = arrays[p + "gen_offsets"]
+                data = arrays[p + "gen_data"]
+                gens = {int(c): data[offs[i]:offs[i + 1]].copy()
+                        for i, c in enumerate(ids)}
+                dims[d] = DimState(
+                    pairs=arrays[p + "pairs"],
+                    pair_cols=arrays[p + "pair_cols"],
+                    essentials=arrays[p + "essentials"],
+                    essential_ids=arrays[p + "essential_ids"],
+                    pivot_lows=arrays[p + "pivot_lows"],
+                    pivot_cols=arrays[p + "pivot_cols"],
+                    gens=gens)
+            ckpt = cls(n=int(meta[1]), n_e=int(meta[2]),
+                       edges=arrays["edges"],
+                       tau_max=float(arrays["__tau__"][0]),
+                       maxdim=int(meta[3]), dims=dims)
+            stored = bytes(arrays["__hash__"]).hex()
+        except CheckpointCorruption:
+            raise
+        except Exception as e:
+            raise CheckpointCorruption(
+                f"malformed checkpoint {path!r}: {e}") from e
+        if ckpt.content_hash() != stored:
+            raise CheckpointCorruption(
+                f"checkpoint {path!r} content hash mismatch "
+                "(bit rot or partial write)")
+        return ckpt
 
 
 def make_reducer(engine: str = "single", mode: str = "implicit",

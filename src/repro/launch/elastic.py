@@ -1,44 +1,35 @@
-# Elastic-training demonstrator: force 8 host devices BEFORE any jax import
-# so meshes can shrink/grow inside one CPU process (same trick as dryrun.py).
-import os
-if "--no-force-devices" not in __import__("sys").argv:
-    os.environ.setdefault("XLA_FLAGS",
-                          "--xla_force_host_platform_device_count=8")
+"""Fault tolerance primitives: heartbeat supervision, shard supervision for
+the distributed reduction, speculative straggler reassignment.
 
-"""Fault tolerance: heartbeat supervision, elastic re-meshing, straggler
-mitigation — runnable end-to-end on CPU.
+This module is imported by ``repro.core.packed_reduce`` — the distributed
+packed GF(2) driver wires :class:`ShardSupervisor` into its superstep
+loop (see ``docs/resilience.md``): every live shard beats once per
+superstep on a *deterministic superstep-indexed clock*, dead shards are
+detected by beat timeout and their remaining batch queue is re-dealt to
+survivors from the last exact commit sweep, and stragglers are sidelined
+for a cooldown so the fused superstep stops synchronizing on the slowest
+host.  At production scale DCN heartbeats and the cluster scheduler
+replace the in-process clock; the recovery algebra (re-deal from the last
+commit sweep, exact-by-construction replica staleness) is identical.
 
-The scenario this module simulates (and ``tests/test_system.py`` asserts):
-
-1. train a reduced model on a (data=4, model=2) mesh with async sharded
-   checkpoints;
-2. a "hardware failure" removes half the devices mid-run (the supervisor's
-   heartbeat detects a dead host);
-3. the supervisor rebuilds a (data=2, model=2) mesh from the survivors,
-   restores the latest checkpoint **resharded onto the new mesh**
-   (Checkpointer.restore with target shardings), reassigns the dead hosts'
-   deterministic data shards (data/tokens.reassign_shards), and continues;
-4. training resumes bit-exactly from the checkpointed step — the loss curve
-   continues downward across the failure boundary.
-
-At production scale the same three primitives (atomic sharded checkpoints,
-reshard-on-restore, deterministic shard reassignment) are what elasticity
-reduces to; DCN heartbeats and scheduler integration replace the in-process
-supervisor.  Straggler mitigation uses the same reassignment path: a host
-whose heartbeat lags gets its shard duplicated onto the fastest survivor
-(speculative execution), and the first result wins — simulated in
-``simulate_straggler``.
+Import discipline: dependency-light (stdlib + numpy) — no jax, no
+side effects.  Anything that forces device counts belongs in the caller's
+environment, not here.
 """
 import dataclasses
 import time
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
 
 @dataclasses.dataclass
 class Heartbeat:
-    """Supervisor-side liveness table (host_id -> last beat time)."""
+    """Supervisor-side liveness table (host_id -> last beat time).
+
+    ``beat``/``dead``/``stragglers`` accept explicit timestamps so callers
+    with a deterministic clock (e.g. the reduction superstep counter) get
+    reproducible failure detection; wall-clock is only a default."""
     timeout_s: float = 5.0
     beats: Dict[int, float] = dataclasses.field(default_factory=dict)
 
@@ -62,73 +53,87 @@ class Heartbeat:
                 if lag > factor * max(med, 1e-3) and lag > med]
 
 
-def run_elastic_demo(steps_before: int = 6, steps_after: int = 6,
-                     ckpt_dir: Optional[str] = None, arch: str = "qwen3-0.6b",
-                     batch: int = 8, seq: int = 32) -> Dict:
-    """The full failure->re-mesh->restore->continue cycle.  Returns the two
-    loss histories + the reassignment map (asserted in tests)."""
-    import jax
-    from repro.checkpoint import Checkpointer
-    from repro.configs import get_config
-    from repro.data.tokens import reassign_shards
-    from repro.launch.mesh import make_mesh
-    from repro.launch.train import TrainJob, run
-
-    assert len(jax.devices()) >= 8, "run under forced 8-device CPU"
-    ckpt_dir = ckpt_dir or "/tmp/repro_elastic_ckpt"
-    cfg = get_config(arch, reduced=True)
-
-    # phase 1: (data=4, model=2), checkpoint every step
-    job = TrainJob(cfg=cfg, steps=steps_before, global_batch=batch,
-                   seq_len=seq, ckpt_dir=ckpt_dir, ckpt_every=1,
-                   mesh_shape=(4, 2), log_every=1)
-    out1 = run(job)
-
-    # phase 2: "pod half dies" -> heartbeat flags hosts 2,3 dead
-    hb = Heartbeat(timeout_s=0.5)
-    now = time.monotonic()
-    for h in range(4):
-        hb.beat(h, now - (10.0 if h >= 2 else 0.0))
-    dead = sorted(hb.dead(now))
-    mapping = reassign_shards(4, dead)
-
-    # phase 3: rebuild smaller mesh, restore resharded, continue
-    job2 = TrainJob(cfg=cfg, steps=steps_before + steps_after,
-                    global_batch=batch, seq_len=seq, ckpt_dir=ckpt_dir,
-                    ckpt_every=10_000, mesh_shape=(2, 2), log_every=1)
-    out2 = run(job2, restore=True)
-
-    return {"pre": out1["history"], "post": out2["history"],
-            "dead": dead, "reassignment": mapping,
-            "final_loss": out2["final_loss"]}
-
-
-def simulate_straggler(n_hosts: int = 4, slow_host: int = 2,
-                       work_items: int = 16) -> Dict:
-    """Speculative-execution policy: the straggler's pending shard is
-    duplicated onto the least-loaded survivor; first finisher wins.
-    Deterministic work items make the winner reproducible."""
-    hb = Heartbeat(timeout_s=100.0)
-    now = time.monotonic()
-    for h in range(n_hosts):
-        hb.beat(h, now - (2.0 if h == slow_host else 0.1))
-    lagging = hb.stragglers(factor=3.0, now=now)
-    assignment = {h: [i for i in range(work_items) if i % n_hosts == h]
-                  for h in range(n_hosts)}
-    backups = {}
-    for s in lagging:
+def speculative_reassign(assignment: Dict[int, List[int]],
+                         stragglers: Sequence[int]) -> Dict[int, int]:
+    """Speculative-execution policy: each straggler's pending work items
+    are duplicated onto the least-loaded non-straggling survivor (first
+    finisher wins).  Mutates ``assignment`` in place and returns the
+    ``straggler -> backup`` map.  Deterministic given its inputs."""
+    backups: Dict[int, int] = {}
+    lagging = set(stragglers)
+    for s in sorted(lagging):
         load = {h: len(v) for h, v in assignment.items() if h not in lagging}
-        backup = min(load, key=load.get)
+        if not load:
+            break
+        backup = min(load, key=lambda h: (load[h], h))
         backups[s] = backup
-        assignment[backup] = assignment[backup] + assignment[s]
-    return {"stragglers": lagging, "backups": backups,
-            "assignment": assignment}
+        assignment[backup] = assignment[backup] + assignment.get(s, [])
+    return backups
 
 
-if __name__ == "__main__":
-    res = run_elastic_demo()
-    print(f"dead hosts: {res['dead']}  reassignment: {res['reassignment']}")
-    pre = res["pre"][-1]["loss"]
-    post = res["post"][-1]["loss"]
-    print(f"loss across failure boundary: {pre:.4f} -> {post:.4f}")
-    print("straggler sim:", simulate_straggler())
+@dataclasses.dataclass
+class RecoveryPlan:
+    """What the supervisor decided for one superstep: which shards died
+    since the last check, which are straggling, and the ``active`` set the
+    driver should deal batches to this superstep."""
+    dead: List[int]
+    stragglers: List[int]
+    active: List[int]
+
+
+class ShardSupervisor:
+    """Heartbeat-driven shard supervision on a deterministic clock.
+
+    The reduction driver owns the clock (its superstep counter) and calls
+    :meth:`observe` once per superstep with each live shard's beat time;
+    shards that miss ``timeout`` clock units are declared dead and removed
+    from ``live`` permanently, stragglers (beat lag > ``factor`` x median)
+    are sidelined from dealing for ``sideline`` supersteps but stay live.
+    With every shard beating on time this is a no-op returning
+    ``active == live``."""
+
+    def __init__(self, n_shards: int, timeout: float = 1.5,
+                 factor: float = 3.0, sideline: int = 1) -> None:
+        if n_shards < 1:
+            raise ValueError("n_shards must be >= 1")
+        self.hb = Heartbeat(timeout_s=timeout)
+        self.live: List[int] = list(range(n_shards))
+        self.factor = factor
+        self.sideline = sideline
+        self._sidelined_until: Dict[int, float] = {}
+        for k in self.live:
+            self.hb.beat(k, t=0.0)
+
+    def observe(self, now: float,
+                beats: Optional[Dict[int, float]] = None) -> RecoveryPlan:
+        """Record this superstep's beats (``shard -> beat time``; a live
+        shard absent from ``beats`` did not beat) and return the plan."""
+        for k, t in (beats or {}).items():
+            if k in self.live:
+                self.hb.beat(k, t=t)
+        newly_dead = sorted(k for k in self.hb.dead(now=now)
+                            if k in self.live)
+        for k in newly_dead:
+            self.live.remove(k)
+            self.hb.beats.pop(k, None)
+            self._sidelined_until.pop(k, None)
+        lagging = sorted(k for k in self.hb.stragglers(factor=self.factor,
+                                                       now=now)
+                         if k in self.live)
+        for k in lagging:
+            self._sidelined_until[k] = now + self.sideline
+        active = [k for k in self.live
+                  if self._sidelined_until.get(k, -np.inf) <= now
+                  or len(self.live) == 1]
+        if not active:                    # never stall: someone must deal
+            active = list(self.live)
+        return RecoveryPlan(dead=newly_dead, stragglers=lagging,
+                            active=active)
+
+    def kill(self, shard: int) -> None:
+        """Remove a shard immediately (used once death is confirmed by a
+        path faster than beat timeout, e.g. a transport-level error)."""
+        if shard in self.live:
+            self.live.remove(shard)
+            self.hb.beats.pop(shard, None)
+            self._sidelined_until.pop(shard, None)

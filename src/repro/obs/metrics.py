@@ -165,6 +165,42 @@ SCHEMA: Dict[str, MetricSpec] = {s.name: s for s in [
           "pending requests at the last step boundary"),
     _spec("serve_ph_latency_s", "histogram", "s",
           "per-request service wall (span-derived)"),
+    # -- resilience (repro.resilience): fault recovery + degradation --
+    _spec("resilience_n_faults", "counter", "faults",
+          "injected faults observed by recovery paths"),
+    _spec("resilience_n_shard_deaths", "counter", "shards",
+          "reduction shards declared dead by heartbeat supervision"),
+    _spec("resilience_n_redeals", "counter", "supersteps",
+          "supersteps re-dealt to survivors after a shard death"),
+    _spec("resilience_n_straggler_sidelines", "counter", "shards",
+          "straggling shards sidelined from batch dealing"),
+    _spec("resilience_n_exchange_retries", "counter", "attempts",
+          "pivot-exchange payload delivery retries"),
+    _spec("resilience_n_exchange_deferrals", "counter", "payloads",
+          "exchange payloads deferred to a later round after retry budget"),
+    _spec("resilience_n_wire_corruptions", "counter", "payloads",
+          "exchange payloads rejected by checksum"),
+    _spec("resilience_n_tile_retries", "counter", "tiles",
+          "harvest tiles recomputed after a transient fault"),
+    _spec("resilience_n_ckpt_corruptions", "counter", "checkpoints",
+          "checkpoints rejected by integrity checks"),
+    _spec("resilience_n_ckpt_fallbacks", "counter", "requests",
+          "cold fallbacks taken after checkpoint corruption"),
+    _spec("resilience_recover_s", "histogram", "s",
+          "time to recover per fault (discarded + re-dealt work)"),
+    _spec("resilience_backoff_s", "histogram", "s",
+          "scheduled backoff delay per retry"),
+    # -- serving degradation (repro.serve.ph) --
+    _spec("serve_ph_n_degraded", "counter", "requests",
+          "responses served degraded (clamped tau / lower maxdim)"),
+    _spec("serve_ph_n_shed", "counter", "requests",
+          "requests load-shed under queue/store pressure"),
+    _spec("serve_ph_n_deadline_degraded", "counter", "requests",
+          "requests degraded to meet a deadline"),
+    _spec("serve_ph_n_circuit_open", "counter", "requests",
+          "requests short-circuited by an open breaker"),
+    _spec("serve_ph_n_cold_retries", "counter", "attempts",
+          "cold reduction retries after transient faults"),
 ]}
 
 

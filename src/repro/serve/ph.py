@@ -26,6 +26,14 @@ memory story instead of re-deriving it per request:
   into a single block-diagonal reduction
   (:func:`~repro.core.resume.batched_cold_reduce`), amortizing engine
   dispatch across clouds with *exact* per-cloud results.
+* **Graceful degradation** (ISSUE 10) — per-request deadlines, bounded
+  cold-retry with deterministic backoff
+  (:func:`repro.resilience.faults.retry_with_backoff`), a circuit breaker
+  per ``(tenant, dataset)``, and load shedding under queue/overload
+  pressure.  A degraded request is served with clamped ``tau`` / lowered
+  ``maxdim`` and the response says so explicitly
+  (``PHResponse.degraded`` + ``degraded_reason``) — degradation is never
+  silent and never an exception.
 
 Everything is deterministic given ``(seed, arrival order)`` and instrumented
 through the ``serve_ph_*`` names in the :mod:`repro.obs.metrics` schema;
@@ -46,6 +54,8 @@ from repro.core.resume import (ReductionCheckpoint, batched_cold_reduce,
                                warm_point_arrival, warm_tau_growth)
 from repro.obs.metrics import MetricsRegistry
 from repro.obs.trace import span, stopwatch
+from repro.resilience.faults import (TransientFault, active_injector,
+                                     retry_with_backoff)
 from repro.scale.budget import (account_bytes, estimate_tau_max,
                                 maxmin_landmarks, sample_pair_lengths)
 
@@ -68,6 +78,7 @@ class PHRequest:
     tenant: str = "default"
     dataset: Optional[str] = None   # default: content-addressed by fingerprint
     maxdim: int = 2
+    deadline_s: Optional[float] = None   # None: engine default_deadline_s
 
 
 @dataclasses.dataclass
@@ -97,7 +108,7 @@ class PHResponse:
     tenant: str
     dataset: str
     admitted: bool
-    path: str                       # rejected|hit|cold|batched|warm_tau|warm_points
+    path: str        # rejected|hit|cold|batched|warm_tau|warm_points|degraded
     granted_tau: float
     diagrams: Optional[Dict[int, np.ndarray]]
     admission: AdmissionDecision
@@ -105,6 +116,8 @@ class PHResponse:
     n_landmarks: Optional[int] = None
     cover_radius: Optional[float] = None
     latency_s: float = 0.0
+    degraded: bool = False          # served under a brown-out contract
+    degraded_reason: str = ""       # deadline|overload|queue_depth|circuit_open|cold_failed
 
 
 @dataclasses.dataclass
@@ -141,6 +154,17 @@ class PHServeEngine:
     by LRU whole-dataset eviction.  ``reducer_opts`` go to
     :func:`repro.core.resume.make_reducer` — ``engine`` may be ``single``,
     ``batch`` or ``packed`` (optionally sharded with ``n_shards``).
+
+    Degradation knobs (``docs/resilience.md``): ``default_deadline_s``
+    compares a cold request against the EWMA of observed cold latency and
+    serves a clamped result when it cannot meet the deadline;
+    ``max_cold_retries`` bounds re-attempts of a failed cold reduction
+    (deterministic backoff, ``retry_base_s``); ``breaker_threshold``
+    consecutive failures open a per-``(tenant, dataset)`` circuit for
+    ``breaker_cooldown_steps`` engine steps; ``shed_queue_depth`` sheds
+    drained requests beyond that depth onto the degraded contract
+    (``tau * degrade_tau_factor`` when finite, ``maxdim`` clamped to
+    ``degrade_maxdim``).  Degraded responses are never cached.
     """
 
     def __init__(self,
@@ -150,6 +174,14 @@ class PHServeEngine:
                  landmark_cap: Optional[int] = None,
                  n_admission_samples: int = 4096,
                  seed: int = 0,
+                 default_deadline_s: Optional[float] = None,
+                 max_cold_retries: int = 2,
+                 retry_base_s: float = 1e-3,
+                 breaker_threshold: int = 3,
+                 breaker_cooldown_steps: int = 2,
+                 shed_queue_depth: Optional[int] = None,
+                 degrade_tau_factor: float = 0.5,
+                 degrade_maxdim: int = 1,
                  **reducer_opts):
         reducer_opts.setdefault("engine", "single")
         reducer_opts.setdefault("mode", "implicit")
@@ -167,6 +199,21 @@ class PHServeEngine:
         self._cache: Dict[Tuple[str, str], _CacheEntry] = {}
         self._seq = 0
         self.metrics = MetricsRegistry()
+        # -- resilience / degradation state --------------------------------
+        self.default_deadline_s = default_deadline_s
+        self.max_cold_retries = int(max_cold_retries)
+        self.retry_base_s = float(retry_base_s)
+        self.breaker_threshold = int(breaker_threshold)
+        self.breaker_cooldown_steps = int(breaker_cooldown_steps)
+        self.shed_queue_depth = shed_queue_depth
+        self.degrade_tau_factor = float(degrade_tau_factor)
+        self.degrade_maxdim = int(degrade_maxdim)
+        self._step_idx = 0
+        # (tenant, dataset) -> {"failures": consecutive, "open_until": step}
+        self._breakers: Dict[Tuple[str, str], Dict[str, int]] = {}
+        self._cold_ewma: Optional[float] = None   # observed cold latency/req
+        self._pinned: set = set()     # keys served this step: LRU-immune
+        self._degraded: Dict[int, str] = {}   # uid -> degrade reason
 
     # -- admission ------------------------------------------------------
     def admission_account(self, points: np.ndarray, requested_tau: float,
@@ -230,7 +277,14 @@ class PHServeEngine:
         entry.seq = self._seq
 
     def _store(self, tenant: str, dataset: str, entry: _CacheEntry) -> bool:
-        """Insert under the tenant budget; LRU-evict whole datasets."""
+        """Insert under the tenant budget; LRU-evict whole datasets.
+
+        Entries already served this step are *pinned* (``self._pinned``) —
+        eviction must never reclaim a dataset that was warmed moments ago
+        in the same drain (the warm result would be produced and then
+        immediately thrown away, and a same-step repeat would go cold).
+        When the only candidates are pinned, the *incoming* entry is
+        dropped instead, preserving the tenant-byte invariant."""
         self._touch(entry)
         key = (tenant, dataset)
         budget = self.store_budget_bytes
@@ -246,8 +300,12 @@ class PHServeEngine:
                 if total <= budget:
                     break
                 victims = [(e.seq, k) for k, e in self._cache.items()
-                           if k[0] == tenant and k != key]
-                if not victims:     # only the new entry left, fits by check
+                           if k[0] == tenant and k != key
+                           and k not in self._pinned]
+                if not victims:
+                    # over budget with only pinned survivors: sacrifice the
+                    # incoming entry rather than a just-served one
+                    self._cache.pop(key, None)
                     break
                 _, victim = min(victims)
                 del self._cache[victim]
@@ -290,15 +348,28 @@ class PHServeEngine:
 
         Returns the number of requests completed this step.
         """
+        self._step_idx += 1
+        self._pinned = set()
         if not self.queue:
             self.metrics.gauge("serve_ph_queue_depth").set(0)
             return 0
+        overload = False
+        inj = active_injector()
+        if inj is not None and inj.fire("serve.step", index=self._step_idx,
+                                        kinds=("overload",)):
+            overload = True
         pending, self.queue = self.queue, []
         self.metrics.gauge("serve_ph_queue_depth").set(len(pending))
         colds: List[Tuple[PHRequest, str, str, np.ndarray, AdmissionDecision,
                           Optional[np.ndarray], Optional[float]]] = []
         n_done = 0
-        for req in pending:
+        for i, req in enumerate(pending):
+            shed = overload or (self.shed_queue_depth is not None
+                                and i >= self.shed_queue_depth)
+            if shed:
+                self.metrics.counter("serve_ph_n_shed").inc()
+                req = self._degrade(req, "overload" if overload
+                                    else "queue_depth")
             with stopwatch("serve_ph/request") as sw:
                 out = self._serve_or_defer(req, colds)
             if out is not None:
@@ -317,8 +388,40 @@ class PHServeEngine:
         return self.done
 
     def _finish(self, resp: PHResponse) -> None:
+        if resp.degraded:
+            self.metrics.counter("serve_ph_n_degraded").inc()
         self.done[resp.uid] = resp
         self.metrics.histogram("serve_ph_latency_s").observe(resp.latency_s)
+
+    # -- degradation -----------------------------------------------------
+    def _degrade(self, req: PHRequest, reason: str) -> PHRequest:
+        """Clamp a request onto the brown-out contract and record why.
+
+        The recorded reason is surfaced on the eventual response
+        (``degraded=True``) no matter which path serves it — degradation
+        is explicit, never silent."""
+        self._degraded[req.uid] = reason
+        tau = float(req.tau_max)
+        if np.isfinite(tau):
+            tau *= self.degrade_tau_factor
+        return dataclasses.replace(
+            req, tau_max=tau, maxdim=min(req.maxdim, self.degrade_maxdim))
+
+    def _breaker_failure(self, key: Tuple[str, str]) -> None:
+        rec = self._breakers.setdefault(key, {"failures": 0, "open_until": 0})
+        rec["failures"] += 1
+        if rec["failures"] >= self.breaker_threshold:
+            rec["open_until"] = self._step_idx + self.breaker_cooldown_steps
+            rec["failures"] = 0
+
+    def _breaker_success(self, key: Tuple[str, str]) -> None:
+        rec = self._breakers.get(key)
+        if rec is not None:
+            rec["failures"] = 0
+
+    def _breaker_open(self, key: Tuple[str, str]) -> bool:
+        rec = self._breakers.get(key)
+        return rec is not None and self._step_idx <= rec["open_until"]
 
     def _serve_or_defer(self, req: PHRequest, colds: list
                         ) -> Optional[PHResponse]:
@@ -348,6 +451,7 @@ class PHServeEngine:
         self.admission_log.append(decision)
         if not decision.admitted:
             self.metrics.counter("serve_ph_n_rejected").inc()
+            self._degraded.pop(req.uid, None)
             dataset = req.dataset or full_fp
             return PHResponse(
                 uid=req.uid, tenant=req.tenant, dataset=dataset,
@@ -357,19 +461,45 @@ class PHServeEngine:
         self.metrics.counter("serve_ph_n_admitted").inc()
         dataset = req.dataset or full_fp
         granted = decision.granted_tau
+        if self._breaker_open((req.tenant, dataset)):
+            # repeated cold failures opened the circuit: fail fast with an
+            # explicit degraded response instead of burning another attempt
+            self.metrics.counter("serve_ph_n_circuit_open").inc()
+            self._degraded.pop(req.uid, None)
+            return PHResponse(
+                uid=req.uid, tenant=req.tenant, dataset=dataset,
+                admitted=True, path="degraded", granted_tau=granted,
+                diagrams=None, admission=decision, degraded=True,
+                degraded_reason="circuit_open")
         # identity of the *served* cloud: landmarked requests cache under
         # the full cloud's fingerprint so repeats reuse the landmark set
         fp = full_fp
         kind, entry = self._classify(req, dataset, fp, points, granted)
+        deadline = req.deadline_s if req.deadline_s is not None \
+            else self.default_deadline_s
+        if kind == "cold" and deadline is not None \
+                and self._cold_ewma is not None \
+                and self._cold_ewma > deadline:
+            # a cold reduction is predicted to blow the deadline: serve the
+            # clamped contract instead (may even turn the request warm)
+            self.metrics.counter("serve_ph_n_deadline_degraded").inc()
+            req = self._degrade(req, "deadline")
+            granted = min(granted, float(req.tau_max))
+            decision = dataclasses.replace(decision, granted_tau=granted)
+            kind, entry = self._classify(req, dataset, fp, points, granted)
         if kind == "hit":
             self.metrics.counter("serve_ph_n_cache_hits").inc()
             self._touch(entry)
+            self._pinned.add((req.tenant, dataset))
+            self._breaker_success((req.tenant, dataset))
+            reason = self._degraded.pop(req.uid, "")
             return PHResponse(
                 uid=req.uid, tenant=req.tenant, dataset=dataset,
                 admitted=True, path="hit", granted_tau=granted,
                 diagrams=dict(entry.diagrams), admission=decision,
                 cached=True, n_landmarks=_lm_n(entry.landmarks),
-                cover_radius=entry.cover_radius)
+                cover_radius=entry.cover_radius,
+                degraded=bool(reason), degraded_reason=reason)
         if kind == "warm_tau":
             self.metrics.counter("serve_ph_n_cache_hits").inc()
             self.metrics.counter("serve_ph_n_warm_tau").inc()
@@ -397,20 +527,32 @@ class PHServeEngine:
     def _respond(self, req, dataset, fp, served, granted, filt, diagrams,
                  ckpt, decision, path, lm_idx, lm_radius) -> PHResponse:
         diagrams = {d: canonical_diagram(v) for d, v in diagrams.items()}
-        # n is the identity-bearing cloud size: the *full* cloud (prefix
-        # checks and fingerprints run against it), not the landmark subset
-        entry = _CacheEntry(
-            fingerprint=fp, n=int(np.asarray(req.points).shape[0]),
-            tau=granted, maxdim=req.maxdim, filtration=filt,
-            checkpoint=ckpt, diagrams=diagrams, seq=0,
-            landmarks=np.asarray(lm_idx) if lm_idx is not None else None,
-            cover_radius=lm_radius)
-        cached = self._store(req.tenant, dataset, entry)
+        self._breaker_success((req.tenant, dataset))
+        reason = self._degraded.pop(req.uid, "")
+        if reason:
+            # degraded (clamped) results are served but never cached — a
+            # brown-out must not evict full-fidelity datasets or masquerade
+            # as one on a later classify
+            cached = False
+        else:
+            # n is the identity-bearing cloud size: the *full* cloud
+            # (prefix checks and fingerprints run against it), not the
+            # landmark subset
+            entry = _CacheEntry(
+                fingerprint=fp, n=int(np.asarray(req.points).shape[0]),
+                tau=granted, maxdim=req.maxdim, filtration=filt,
+                checkpoint=ckpt, diagrams=diagrams, seq=0,
+                landmarks=np.asarray(lm_idx) if lm_idx is not None else None,
+                cover_radius=lm_radius)
+            cached = self._store(req.tenant, dataset, entry)
+            if cached:
+                self._pinned.add((req.tenant, dataset))
         return PHResponse(
             uid=req.uid, tenant=req.tenant, dataset=dataset, admitted=True,
             path=path, granted_tau=granted, diagrams=dict(diagrams),
             admission=decision, cached=cached, n_landmarks=_lm_n(lm_idx),
-            cover_radius=lm_radius)
+            cover_radius=lm_radius, degraded=bool(reason),
+            degraded_reason=reason)
 
     def _run_cold_batches(self, colds: list) -> int:
         """Pack drained cold requests into union reductions, chunked to
@@ -426,20 +568,57 @@ class PHServeEngine:
         return n_done
 
     def _serve_cold_chunk(self, chunk: list, maxdim: int) -> int:
-        with stopwatch("serve_ph/cold_chunk") as sw:
-            filts = [build_filtration(points=served, tau_max=dec.granted_tau)
+        inj = active_injector()
+        batched = len(chunk) > 1
+
+        def attempt(a: int):
+            if inj is not None and inj.fire(
+                    "serve.step", index=self._step_idx,
+                    kinds=("fail_reduce",), attempt=a):
+                raise TransientFault("injected cold-reduction failure")
+            filts = [build_filtration(points=served,
+                                      tau_max=dec.granted_tau)
                      for (_, _, _, served, dec, _, _) in chunk]
-            batched = len(chunk) > 1
             with span("serve_ph/reduce", n_clouds=len(chunk),
                       batched=batched):
-                results = batched_cold_reduce(filts, maxdim=maxdim,
-                                              reducer=self._reducer)
+                return filts, batched_cold_reduce(filts, maxdim=maxdim,
+                                                  reducer=self._reducer)
+
+        def note_retry(a, err, delay_s):
+            self.metrics.counter("serve_ph_n_cold_retries").inc()
+
+        with stopwatch("serve_ph/cold_chunk") as sw:
+            try:
+                filts, results = retry_with_backoff(
+                    attempt, attempts=1 + self.max_cold_retries,
+                    base_s=self.retry_base_s,
+                    seed=self.seed ^ (self._step_idx << 4),
+                    sleep=None, on_retry=note_retry)
+            except TransientFault:
+                results = None
+        if results is None:
+            # retry budget spent: every request in the chunk gets an
+            # explicit degraded response and counts against its circuit
+            for (req, dataset, fp, served, dec, lm_idx, lm_radius) in chunk:
+                self._breaker_failure((req.tenant, dataset))
+                self._degraded.pop(req.uid, None)
+                self._finish(PHResponse(
+                    uid=req.uid, tenant=req.tenant, dataset=dataset,
+                    admitted=True, path="degraded",
+                    granted_tau=dec.granted_tau, diagrams=None,
+                    admission=dec, degraded=True,
+                    degraded_reason="cold_failed",
+                    latency_s=sw.elapsed / len(chunk)))
+            return len(chunk)
         if batched:
             self.metrics.counter("serve_ph_n_batches").inc()
             self.metrics.counter("serve_ph_n_batched").inc(len(chunk))
             self.metrics.histogram("serve_ph_batch_clouds").observe(
                 len(chunk))
         per_req = sw.elapsed / len(chunk)
+        # EWMA of cold latency feeds the deadline-degrade predictor
+        self._cold_ewma = per_req if self._cold_ewma is None \
+            else 0.3 * per_req + 0.7 * self._cold_ewma
         for (req, dataset, fp, served, dec, lm_idx, lm_radius), filt, \
                 (diagrams, ckpt) in zip(chunk, filts, results):
             self.metrics.counter("serve_ph_n_cold").inc()

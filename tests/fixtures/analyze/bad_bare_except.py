@@ -1,0 +1,28 @@
+"""Negative fixture for the bare-except rule (linted as text, not run)."""
+
+
+def swallow_everything(load):
+    try:
+        return load()
+    except:             # BAD: absorbs KeyboardInterrupt and injected faults
+        return None
+
+
+def swallow_in_loop(attempts, fn):
+    out = None
+    for _ in range(attempts):
+        try:
+            out = fn()
+            break
+        except:         # BAD: the retry can never distinguish fault classes
+            continue
+    return out
+
+
+def typed_is_fine(load):
+    try:
+        return load()
+    except ValueError:  # good: names the recoverable failure
+        return None
+    except (OSError, KeyError) as err:  # good: typed tuple with binding
+        raise RuntimeError("unreadable") from err

@@ -1,0 +1,32 @@
+"""Negative fixture for retry-without-backoff (linted as text, not run)."""
+import time
+from time import sleep
+
+
+def hammer(fn, attempts=5):
+    for _ in range(attempts):
+        try:
+            return fn()
+        except ValueError:
+            time.sleep(0.1)     # BAD: fixed cadence, no jitter, no backoff
+
+
+def hammer_bare_sleep(fn):
+    while True:
+        try:
+            return fn()
+        except ValueError:
+            sleep(1)            # BAD: bare `sleep` imported from time
+
+
+def computed_schedule_is_fine(fn, delays):
+    for a, delay_s in enumerate(delays):
+        try:
+            return fn(a)
+        except ValueError:
+            time.sleep(delay_s)  # good: computed (backoff) duration
+
+
+def sleep_outside_retry_is_fine():
+    for _ in range(3):
+        time.sleep(0.01)         # good: no try/except -> not a retry loop

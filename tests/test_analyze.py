@@ -20,9 +20,9 @@ from repro.analyze.collectives import (
     collective_schedule_from_hlo, repo_programs, schedule_signature,
     verify_axes)
 from repro.analyze.lint import (
-    DtypeBoundaryRule, HostSyncRule, RawFiltrationSortRule, RawTimingRule,
-    RefMutationRule, SpanLeakRule, UnseededRngRule, default_rules, lint_file,
-    lint_source)
+    BareExceptRule, DtypeBoundaryRule, HostSyncRule, RawFiltrationSortRule,
+    RawTimingRule, RefMutationRule, RetryWithoutBackoffRule, SpanLeakRule,
+    UnseededRngRule, default_rules, lint_file, lint_source)
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 FIXTURES = os.path.join(REPO, "tests", "fixtures", "analyze")
@@ -104,9 +104,39 @@ def test_span_leak_fixture_caught():
     assert all(f.line < 18 for f in found)
 
 
+def test_bare_except_fixture_caught():
+    found = lint_fixture("bad_bare_except.py", BareExceptRule())
+    assert len(found) == 2          # the two bare handlers, not the typed ones
+    assert all(f.rule == "bare-except" for f in found)
+    assert all("typed fault" in f.message for f in found)
+
+
+def test_retry_without_backoff_fixture_caught():
+    found = lint_fixture("bad_retry_no_backoff.py",
+                         RetryWithoutBackoffRule())
+    assert len(found) == 2          # time.sleep(0.1) and bare sleep(1)
+    assert all("retry_with_backoff" in f.message for f in found)
+    # computed-duration sleeps and sleeps outside try/except stay legal
+    lines = sorted(f.line for f in found)
+    src = open(os.path.join(FIXTURES, "bad_retry_no_backoff.py")
+               ).read().splitlines()
+    assert all("BAD" in src[ln - 1] for ln in lines)
+
+
+def test_retry_with_backoff_itself_lints_clean():
+    # the blessed helper's own retry loop (variable delay via its `sleep`
+    # parameter) must not trip the rule that points offenders at it
+    path = os.path.join(REPO, "src", "repro", "resilience", "faults.py")
+    assert not [f for f in lint_file(path, root=REPO,
+                                     rules=[RetryWithoutBackoffRule(),
+                                            BareExceptRule()], force=True)
+                if not f.allowed]
+
+
 def test_new_rules_registered_in_defaults():
     names = {r.name for r in default_rules()}
-    assert {"raw-timing", "span-leak"} <= names
+    assert {"raw-timing", "span-leak",
+            "bare-except", "retry-without-backoff"} <= names
 
 
 def test_allow_pragma_suppresses_with_justification():

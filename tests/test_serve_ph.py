@@ -397,3 +397,43 @@ def test_serve_latency_and_store_metrics_populated():
     assert s["serve_ph_latency_s_sum"] > 0
     assert s["serve_ph_store_bytes"] > 0
     assert eng.done[0].latency_s > 0
+
+
+def test_same_step_warm_entry_survives_eviction_at_byte_cap():
+    """Regression (ISSUE 10 bugfix): at the tenant byte cap, LRU eviction
+    used to reclaim the dataset warmed *in the same step* to make room for
+    a cold arrival — throwing away the entry the step just paid to warm.
+    In-flight entries are now pinned for the step; the incoming cold entry
+    is sacrificed instead (served, just not cached)."""
+    p_warm, p_cold = cloud(90, 24), cloud(91, 24)
+    # pilot sizes both datasets at the final tau so the budget can be set
+    # to hold either one alone, but never both
+    pilot = PHServeEngine(engine="single")
+    pilot.submit(PHRequest(uid=0, points=p_warm, tau_max=1.3, dataset="w"))
+    pilot.submit(PHRequest(uid=1, points=p_cold, tau_max=1.3, dataset="c"))
+    pilot.run()
+    s_warm = pilot._cache[("default", "w")].nbytes()
+    s_cold = pilot._cache[("default", "c")].nbytes()
+
+    eng = PHServeEngine(
+        engine="single",
+        store_budget_bytes=max(s_warm, s_cold) + min(s_warm, s_cold) // 2)
+    eng.submit(PHRequest(uid=0, points=p_warm, tau_max=1.0, dataset="w"))
+    eng.step()
+    # one drain holds [warm_tau "w", cold "c"]; warm is served inline
+    # first, the cold batch lands after and hits the byte cap
+    eng.submit(PHRequest(uid=1, points=p_warm, tau_max=1.3, dataset="w"))
+    eng.submit(PHRequest(uid=2, points=p_cold, tau_max=1.3, dataset="c"))
+    eng.step()
+    warm, cold = eng.done[1], eng.done[2]
+    assert warm.path == "warm_tau" and warm.cached
+    assert ("default", "w") in eng._cache, "just-warmed entry was evicted"
+    assert not cold.cached               # the incoming entry is sacrificed
+    assert_same(cold.diagrams, cold_diagrams(p_cold, 1.3))  # still served
+    # the byte-cap invariant holds throughout
+    total = sum(e.nbytes() for e in eng._cache.values())
+    assert total <= eng.store_budget_bytes
+    # next step, the warmed entry is reusable (the whole point of pinning)
+    eng.submit(PHRequest(uid=3, points=p_warm, tau_max=1.3, dataset="w"))
+    eng.step()
+    assert eng.done[3].path == "hit"

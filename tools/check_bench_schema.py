@@ -29,6 +29,10 @@ SCALE_MEMORY = ("predicted_account_bytes", "observed_peak_harvest_bytes",
 SERVE_PHASES = ("cold", "warm")
 SERVE_FIELDS = ("requests_per_s", "cache_hit_ratio", "latency_p50_s",
                 "latency_p95_s")
+CHAOS_PHASES = ("reduce", "serve", "checkpoint")
+CHAOS_REDUCE_COUNTS = ("n_shard_deaths", "n_redeals",
+                       "n_straggler_sidelines", "n_exchange_retries",
+                       "n_exchange_deferrals", "n_wire_corruptions")
 
 
 def _check_phases(where: str, entry: Dict, keys) -> List[str]:
@@ -90,8 +94,49 @@ def check_serve(record: Dict) -> List[str]:
     return errors
 
 
+def check_chaos(record: Dict) -> List[str]:
+    errors = _check_phases("chaos_soak", record, CHAOS_PHASES)
+    if record.get("n_faults_injected", 0) < 1:
+        errors.append("chaos_soak: no fault ever fired (n_faults_injected "
+                      "< 1) - the soak tested nothing")
+    if record.get("exact_recovery") is not True:
+        errors.append("chaos_soak: exact_recovery is not True - a faulted "
+                      "run diverged from the fault-free diagrams")
+    for k in ("mttr_mean_s", "mttr_max_s"):
+        v = record.get(k)
+        if not isinstance(v, (int, float)) or v < 0:
+            errors.append(f"chaos_soak: recovery field {k!r} missing or "
+                          f"negative (got {v!r})")
+    reduce_soak = record.get("reduce")
+    if not isinstance(reduce_soak, dict):
+        errors.append("chaos_soak: missing 'reduce' soak section")
+    else:
+        for k in CHAOS_REDUCE_COUNTS:
+            v = reduce_soak.get(k)
+            if not isinstance(v, int) or v < 0:
+                errors.append(f"chaos_soak: reduce[{k!r}] missing or "
+                              f"negative (got {v!r})")
+        if reduce_soak.get("n_shard_deaths", 0) >= 1 \
+                and reduce_soak.get("n_redeals", 0) < 1:
+            errors.append("chaos_soak: shards died but no queue was ever "
+                          "re-dealt - recovery path not exercised")
+    serve_soak = record.get("serve")
+    if not isinstance(serve_soak, dict):
+        errors.append("chaos_soak: missing 'serve' soak section")
+    elif serve_soak.get("all_degraded_explicit") is not True:
+        errors.append("chaos_soak: a degraded serve response carried no "
+                      "reason (all_degraded_explicit is not True)")
+    ckpt = record.get("checkpoint")
+    if not isinstance(ckpt, dict):
+        errors.append("chaos_soak: missing 'checkpoint' soak section")
+    elif ckpt.get("all_detected") is not True:
+        errors.append("chaos_soak: a corrupted checkpoint loaded without "
+                      "detection (all_detected is not True)")
+    return errors
+
+
 CHECKERS = {"reduce_bench": check_reduce, "scale_smoke": check_scale,
-            "serve_bench": check_serve}
+            "serve_bench": check_serve, "chaos_soak": check_chaos}
 
 
 def check_bench_file(path: str) -> List[str]:
